@@ -1,0 +1,50 @@
+"""Pallas kernel microbenches.
+
+On this CPU container kernels execute through the interpreter, so absolute
+numbers are NOT TPU numbers — we report them for regression tracking plus
+the jnp-reference time for the same math (the kernels' oracle cost)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+
+def _timeit(fn, *args, repeat=3):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / repeat
+
+
+def run():
+    rows = []
+    rng = np.random.default_rng(0)
+
+    # qmatmul: the LM-side mixed-precision matmul
+    x = jnp.asarray(rng.normal(size=(256, 1024)).astype(np.float32))
+    w = jnp.asarray(rng.integers(-8, 8, (1024, 512)).astype(np.int8))
+    s = jnp.asarray(rng.uniform(0.01, 0.1, (512,)).astype(np.float32))
+    t_int = _timeit(lambda: ops.qmatmul(x, w, s, interpret=True))
+    t_ref = _timeit(lambda: ref.qmatmul(x, w, s.reshape(1, -1)))
+    flops = 2 * 256 * 1024 * 512
+    rows.append({"kernel": "qmatmul_256x1024x512",
+                 "us_interpret": 1e6 * t_int, "us_ref_jnp": 1e6 * t_ref,
+                 "gflops_at_ref": flops / t_ref / 1e9})
+
+    # domination: NSGA-II O(P^2)
+    objs = jnp.asarray(rng.uniform(0, 1, (512, 2)).astype(np.float32))
+    t_int = _timeit(lambda: ops.domination_matrix(objs, interpret=True))
+    t_ref = _timeit(lambda: ref.domination_matrix(objs))
+    rows.append({"kernel": "domination_512", "us_interpret": 1e6 * t_int,
+                 "us_ref_jnp": 1e6 * t_ref,
+                 "gflops_at_ref": 512 * 512 * 6 / t_ref / 1e9})
+
+    return rows

@@ -1,0 +1,75 @@
+"""The paper's technique carried to the LM zoo: NSGA-II mixed-precision
+search over per-tensor (bits, snap-margin) genes — the comparator chromosome
+applied to matmul weights (DESIGN.md §5, repro.quantize).
+
+Trains a tiny LM briefly, then searches the (accuracy loss, hardware cost)
+space. Cost = bytes + CSD multiplier cost of the snapped codes; the quantized
+codes are what kernels.qmatmul executes at serving time.
+
+    PYTHONPATH=src python examples/lm_quant_search.py --arch gemma-2b
+"""
+import argparse
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduced_config
+from repro.core import nsga2
+from repro.data import SyntheticLMData
+from repro.models import lm, transformer
+from repro.optim import adamw
+from repro.quantize import make_lm_quant_problem, quantizable_tensors
+from repro.runtime import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma-2b")
+    ap.add_argument("--train-steps", type=int, default=30)
+    ap.add_argument("--pop", type=int, default=16)
+    ap.add_argument("--gens", type=int, default=8)
+    args = ap.parse_args()
+
+    cfg = reduced_config(get_config(args.arch), d_model=128, n_layers=3,
+                         d_ff=512, vocab_size=2048, prefix_len=0,
+                         loss_chunk=2048)
+    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+
+    # brief training so quantization has real structure to preserve
+    opt = adamw(lr=3e-3)
+    step_fn = jax.jit(train.make_train_step(cfg, optimizer=opt))
+    state = train.init_train_state(params, opt)
+    data = SyntheticLMData(cfg.vocab_size, 128, 16, seed=1)
+    for s in range(args.train_steps):
+        state, metrics = step_fn(state, {"tokens": jnp.asarray(
+            data.batch(s)["tokens"])})
+    params = state.params
+    print(f"trained tiny {args.arch}: loss {float(metrics['loss']):.3f}")
+
+    eval_batch = {"tokens": jnp.asarray(data.batch(10_000)["tokens"])}
+    loss_fn = jax.jit(lambda p, b: lm.lm_loss(p, cfg, b)[0])
+    fitness, n_genes, base = make_lm_quant_problem(params, cfg, eval_batch,
+                                                   loss_fn)
+    n_tensors = len(quantizable_tensors(params))
+    print(f"searching {n_tensors} tensors ({n_genes} genes), "
+          f"float loss {base:.3f}")
+
+    ga = nsga2.NSGA2Config(pop_size=args.pop, n_generations=args.gens)
+    state = nsga2.run(jax.random.PRNGKey(0),
+                      lambda g: jnp.asarray(fitness(np.asarray(g))),
+                      n_genes, ga, jit=False)
+    objs, genes = nsga2.pareto_front(state.objs, state.genes)
+    print("\npareto (loss increase, cost vs bf16):")
+    for o in objs:
+        print(f"  dloss={o[0]:+.4f}  cost={o[1]:.3f} "
+              f"({1/max(o[1],1e-9):.2f}x smaller than bf16)")
+    ok = objs[objs[:, 0] <= 0.02]
+    if len(ok):
+        best = ok[ok[:, 1].argmin()]
+        print(f"\n@<=0.02 loss increase: {1/best[1]:.2f}x cost reduction "
+              f"— the paper's area-accuracy trade carried to the LM zoo")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,93 @@
+"""End-to-end LM training driver: data pipeline -> sharded train loop ->
+checkpoint/restart -> resume.
+
+Trains a small decoder LM (a reduced config of any assigned arch) on the
+synthetic corpus, checkpoints every N steps, then simulates a crash and
+resumes from the last checkpoint — the production fault-tolerance loop in
+miniature. Run bigger configs / more steps on real hardware with the same
+flags.
+
+    PYTHONPATH=src python examples/lm_train.py --arch llama3.2-3b \
+        --steps 60 --d-model 256 --layers 4
+"""
+import argparse
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduced_config
+from repro.data import SyntheticLMData
+from repro.models import transformer
+from repro.optim import get_optimizer, warmup_cosine_schedule, adamw
+from repro.runtime import checkpoint, train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-3b")
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--d-model", type=int, default=256)
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--vocab", type=int, default=4096)
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--ckpt-dir", default="/tmp/lm_train_ckpt")
+    args = ap.parse_args()
+
+    cfg = reduced_config(
+        get_config(args.arch), d_model=args.d_model, n_layers=args.layers,
+        d_ff=4 * args.d_model, vocab_size=args.vocab,
+        loss_chunk=args.batch * args.seq // 4)
+    n_text = args.seq - cfg.prefix_len
+
+    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"arch={args.arch} (reduced) params={n_params/1e6:.1f}M "
+          f"tokens/step={args.batch * n_text}")
+
+    sched = warmup_cosine_schedule(3e-3, 10, args.steps)
+    opt = adamw(schedule=sched)
+    step_fn = jax.jit(train.make_train_step(cfg, optimizer=opt))
+    state = train.init_train_state(params, opt)
+    data = SyntheticLMData(cfg.vocab_size, n_text, args.batch, seed=7)
+
+    def batch_for(step):
+        b = data.batch(step)
+        out = {"tokens": jnp.asarray(b["tokens"])}
+        if cfg.prefix_len:
+            out["prefix_embed"] = jnp.zeros(
+                (args.batch, cfg.prefix_len, cfg.d_model), jnp.float32)
+        return out
+
+    crash_at = args.steps // 2
+    t0 = time.time()
+    for step in range(crash_at):
+        state, metrics = step_fn(state, batch_for(step))
+        if step % args.ckpt_every == 0 or step == crash_at - 1:
+            checkpoint.save(args.ckpt_dir, step, state)
+        if step % 10 == 0:
+            print(f"step {step:4d} loss {float(metrics['loss']):.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.2f} "
+                  f"({(time.time()-t0)/(step+1):.2f}s/step)")
+
+    print(f"\n!! simulated crash at step {crash_at}; restarting from last "
+          f"checkpoint")
+    last = checkpoint.latest_step(args.ckpt_dir)
+    state2 = train.init_train_state(params, opt)
+    state2, restored_step = checkpoint.restore(args.ckpt_dir, last, state2)
+    print(f"resumed at step {int(state2.step)} (checkpoint {restored_step})")
+
+    for step in range(int(state2.step), args.steps):
+        state2, metrics = step_fn(state2, batch_for(step))
+        if step % 10 == 0:
+            print(f"step {step:4d} loss {float(metrics['loss']):.4f}")
+    print(f"\nfinal loss {float(metrics['loss']):.4f} "
+          f"(started ~{np.log(cfg.vocab_size):.2f}); "
+          f"total {time.time()-t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+"""The paper's primary contribution: approximate bespoke Decision Trees.
+
+- train.py  CART training (gini, expand-until-pure)
+- tree.py   flattened trees + parallel comparator-array form (TPU dataflow)
+- quant.py  precision-conversion module (paper Fig. 3b)
+- area.py   comparator gate model + Area LUT (paper Fig. 4) + power model
+- approx.py dual approximation chromosome -> (accuracy loss, area) fitness
+- nsga2.py  vectorized NSGA-II (paper §III-B)
+- dist.py   population sharding + island-model GA across pods
+- rtl.py    bespoke Verilog emission (paper §III synthesis front-end)
+"""
+from repro.core import approx, area, nsga2, quant, rtl, tree, train
+
+__all__ = ["approx", "area", "nsga2", "quant", "rtl", "tree", "train"]

@@ -1,0 +1,140 @@
+"""Random-Forest extension (beyond paper, same machinery).
+
+The paper targets single Decision Trees but names Random Forests among the
+hardware-friendly classifier families ([1] evaluates them). A bespoke RF is
+K parallel bespoke trees + a majority-vote adder tree — so the dual
+approximation applies per comparator across the WHOLE forest with one
+chromosome of 2*sum_k(N_k) genes, and cross-tree comparator sharing (CSE)
+makes the joint search strictly richer than per-tree searches: moving two
+trees' thresholds to the SAME hardware-friendly value collapses them into
+one comparator.
+
+Everything reuses core.{train,tree,quant,approx,nsga2}; fitness is the
+voted accuracy, area the CSE'd comparator sum + per-tree overheads.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import approx, area as area_mod, quant
+from repro.core.train import TreeArrays, train_tree
+from repro.core.tree import ParallelTree, to_parallel, leaves_from_decisions
+from repro.datasets.synthetic import quantize_u8
+
+
+@dataclasses.dataclass
+class Forest:
+    trees: list[TreeArrays]
+    ptrees: list[ParallelTree]
+    n_classes: int
+
+    @property
+    def n_comparators(self) -> int:
+        return sum(p.n_comparators for p in self.ptrees)
+
+    @property
+    def n_genes(self) -> int:
+        return 2 * self.n_comparators
+
+
+def train_forest(x, y, n_classes, n_trees=5, seed=0, feature_frac=0.7):
+    """Bootstrap-sampled trees over random feature subsets (classic RF)."""
+    rng = np.random.default_rng(seed)
+    n, f = x.shape
+    trees = []
+    for _ in range(n_trees):
+        idx = rng.integers(0, n, n)
+        feats = rng.permutation(f)[: max(1, int(f * feature_frac))]
+        xb = np.zeros_like(x)
+        xb[:, feats] = x[idx][:, feats]
+        trees.append(train_tree(xb, y[idx], n_classes))
+    return Forest(trees, [to_parallel(t) for t in trees], n_classes)
+
+
+def forest_predict(forest: Forest, x8, bits_all, marg_all):
+    """Majority vote over quantized trees. bits/marg: concatenated per-tree
+    comparator genes (decoded)."""
+    votes = jnp.zeros((x8.shape[0], forest.n_classes), jnp.float32)
+    off = 0
+    for pt in forest.ptrees:
+        n = pt.n_comparators
+        bits = bits_all[off:off + n]
+        marg = marg_all[off:off + n]
+        t_int = quant.substitute(
+            quant.threshold_to_int(jnp.asarray(pt.threshold), bits), marg, bits)
+        x_g = x8[:, jnp.asarray(pt.feature)]
+        x_p = quant.inputs_at_precision(x_g, bits)
+        d = x_p > t_int[None, :]
+        leaf = leaves_from_decisions(d, jnp.asarray(pt.path),
+                                     jnp.asarray(pt.path_len))
+        cls = jnp.asarray(pt.leaf_class)[leaf]
+        votes = votes + jax.nn.one_hot(cls, forest.n_classes)
+        off += n
+    return jnp.argmax(votes, axis=1)
+
+
+def forest_area_mm2(forest: Forest, bits_all, marg_all, dedup=True) -> float:
+    """CSE'd area across ALL trees: identical (feature, t', p) comparators
+    are shared forest-wide, exactly like DC synthesis of the flat netlist."""
+    feats, t_ints, bits_np = [], [], []
+    off = 0
+    bits_all = np.asarray(bits_all)
+    marg_all = np.asarray(marg_all)
+    for pt in forest.ptrees:
+        n = pt.n_comparators
+        b = bits_all[off:off + n]
+        t = np.clip(np.floor(pt.threshold * (2.0 ** b)), 0, (1 << b) - 1)
+        t = np.clip(t + marg_all[off:off + n], 0, (1 << b) - 1)
+        feats.append(pt.feature)
+        t_ints.append(t.astype(np.int64))
+        bits_np.append(b)
+        off += n
+    area = area_mod.tree_area_mm2(
+        np.concatenate(feats), np.concatenate(t_ints),
+        np.concatenate(bits_np),
+        sum(p.n_leaves for p in forest.ptrees), dedup=dedup)
+    return float(area)
+
+
+def make_forest_fitness(forest: Forest, x_test, y_test):
+    """(P, 2*N_total) genes -> (P, 2) objectives (accuracy loss, norm area).
+
+    Accuracy is jnp/jit (vote over trees); area uses the additive LUT like
+    the paper's estimator (CSE only at final scoring, as in benchmarks).
+    """
+    x8 = jnp.asarray(quantize_u8(x_test).astype(np.int32))
+    y = jnp.asarray(y_test.astype(np.int32))
+    lut, offsets = area_mod.build_area_lut()
+    lut, offsets = jnp.asarray(lut), jnp.asarray(offsets)
+    thresholds = jnp.concatenate(
+        [jnp.asarray(p.threshold) for p in forest.ptrees])
+    overhead = area_mod.tree_overhead_mm2(
+        forest.n_comparators, sum(p.n_leaves for p in forest.ptrees))
+
+    exact_bits = jnp.full((forest.n_comparators,), 8, jnp.int32)
+    zero_marg = jnp.zeros((forest.n_comparators,), jnp.int32)
+    t8 = quant.threshold_to_int(thresholds, exact_bits)
+    exact_area = float(lut[offsets[exact_bits] + t8].sum() + overhead)
+
+    def acc_of(bits, marg):
+        pred = forest_predict(forest, x8, bits, marg)
+        return jnp.mean((pred == y).astype(jnp.float32))
+
+    exact_acc = float(acc_of(exact_bits, zero_marg))
+
+    @jax.jit
+    def fitness(pop):
+        def one(genes):
+            bits, marg = quant.decode_genes(genes)
+            t_int = quant.substitute(
+                quant.threshold_to_int(thresholds, bits), marg, bits)
+            a = lut[offsets[bits] + t_int].sum() + overhead
+            return jnp.stack([exact_acc - acc_of(bits, marg),
+                              a / exact_area])
+        return jax.vmap(one)(pop)
+
+    return fitness, exact_acc, exact_area

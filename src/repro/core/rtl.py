@@ -1,0 +1,72 @@
+"""Bespoke RTL (Verilog) emission for exact/approximate Decision Trees.
+
+Mirrors the paper's flow: the tree structure is parsed into a fully-parallel
+netlist — one hard-wired comparator per internal node, a path-AND per leaf and
+a one-hot class encoder — ready for synthesis with a printed-technology PDK.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.tree import ParallelTree
+
+
+def _comparator_expr(x_name: str, bits: int, t_int: int) -> str:
+    if t_int >= (1 << bits) - 1:
+        return "1'b0"  # X > max is constant false
+    return f"({x_name}[7:{8 - bits}] > {bits}'d{t_int})"
+
+
+def emit_verilog(
+    pt: ParallelTree,
+    bits: np.ndarray,
+    t_int: np.ndarray,
+    module_name: str = "bespoke_dtree",
+) -> str:
+    """Emit a bespoke Verilog module for the (approximate) tree.
+
+    bits/t_int: per-comparator precision and substituted integer threshold.
+    Inputs are the 8-bit master codes of each used feature; comparators slice
+    their top `bits` bits (truncation = right shift, matching core.quant).
+    """
+    n_cls_bits = max(1, int(np.ceil(np.log2(max(pt.n_classes, 2)))))
+    used_features = sorted(set(int(f) for f in pt.feature))
+    lines = [
+        f"// Auto-generated bespoke approximate decision tree",
+        f"// comparators={pt.n_comparators} leaves={pt.n_leaves} classes={pt.n_classes}",
+        f"module {module_name} (",
+    ]
+    lines += [f"    input  wire [7:0] x{f}," for f in used_features]
+    lines += [f"    output wire [{n_cls_bits - 1}:0] class_out", ");"]
+
+    # comparator array (all fire in parallel — the bespoke circuit dataflow)
+    for c in range(pt.n_comparators):
+        f = int(pt.feature[c])
+        expr = _comparator_expr(f"x{f}", int(bits[c]), int(t_int[c]))
+        lines.append(f"  wire d{c} = {expr};")
+
+    # per-leaf path AND
+    leaf_terms = []
+    for l in range(pt.n_leaves):
+        lits = []
+        for c in range(pt.n_comparators):
+            v = int(pt.path[l, c])
+            if v == 1:
+                lits.append(f"d{c}")
+            elif v == -1:
+                lits.append(f"~d{c}")
+        leaf_terms.append(" & ".join(lits) if lits else "1'b1")
+        lines.append(f"  wire leaf{l} = {leaf_terms[-1]};")
+
+    # one-hot class encoder: OR of leaves per class bit
+    for b in range(n_cls_bits):
+        ors = [
+            f"leaf{l}"
+            for l in range(pt.n_leaves)
+            if (int(pt.leaf_class[l]) >> b) & 1
+        ]
+        rhs = " | ".join(ors) if ors else "1'b0"
+        lines.append(f"  assign class_out[{b}] = {rhs};")
+
+    lines.append("endmodule")
+    return "\n".join(lines) + "\n"

@@ -1,0 +1,160 @@
+"""Flattened decision trees + the TPU-native *parallel comparator-array* form.
+
+The paper's bespoke circuit is fully parallel: every comparator evaluates
+simultaneously and leaf-decode logic selects the class. We mirror exactly that
+dataflow so DT inference lands on the MXU instead of pointer-chasing:
+
+  decisions D[b, n] = (x_int[b, feat[n]] > t_int[n])          (comparator array)
+  score[b, l]      = D[b] . P[l] + n_neg[l]                   (path matmul)
+  leaf[b]          = argmax_l (score[b, l] - path_len[l])     (decode; max == 0)
+
+P[l, n] = +1 if leaf l's path requires decision n true (go right), -1 if it
+requires it false, 0 if node n is not on the path. score == path_len holds for
+exactly one leaf. This is the reference (pure-jnp) implementation; the Pallas
+kernel in repro.kernels.tree_infer computes the same fused form.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import quant
+from repro.core.train import TreeArrays
+
+
+@dataclasses.dataclass
+class ParallelTree:
+    """Comparator-array form. N comparators (internal nodes), L leaves."""
+
+    feature: np.ndarray     # int32[N]  feature index per comparator
+    threshold: np.ndarray   # float32[N] trained float threshold in (0,1)
+    path: np.ndarray        # int8[L, N] in {-1, 0, +1}
+    path_len: np.ndarray    # int32[L]  number of nonzeros per row
+    n_neg: np.ndarray       # int32[L]  number of -1 per row
+    leaf_class: np.ndarray  # int32[L]
+    n_classes: int
+
+    @property
+    def n_comparators(self) -> int:
+        return int(self.feature.shape[0])
+
+    @property
+    def n_leaves(self) -> int:
+        return int(self.leaf_class.shape[0])
+
+
+def to_parallel(tree: TreeArrays) -> ParallelTree:
+    """Flatten a TreeArrays into the comparator-array + path-matrix form."""
+    internal = np.flatnonzero(tree.feature >= 0)
+    leaves = np.flatnonzero(tree.feature < 0)
+    comp_of_node = {int(n): i for i, n in enumerate(internal)}
+    n_comp, n_leaf = len(internal), len(leaves)
+
+    path = np.zeros((n_leaf, max(n_comp, 1)), dtype=np.int8)
+    # DFS carrying the (comparator, direction) prefix
+    stack = [(0, [])]
+    leaf_rows = {}
+    while stack:
+        node, prefix = stack.pop()
+        if tree.feature[node] < 0:
+            leaf_rows[node] = prefix
+            continue
+        c = comp_of_node[node]
+        stack.append((int(tree.left[node]), prefix + [(c, -1)]))
+        stack.append((int(tree.right[node]), prefix + [(c, +1)]))
+    for row, node in enumerate(leaves):
+        for c, d in leaf_rows[int(node)]:
+            path[row, c] = d
+
+    pl = (path != 0).sum(axis=1).astype(np.int32)
+    nn = (path == -1).sum(axis=1).astype(np.int32)
+    return ParallelTree(
+        feature=tree.feature[internal].astype(np.int32),
+        threshold=tree.threshold[internal].astype(np.float32),
+        path=path,
+        path_len=pl,
+        n_neg=nn,
+        leaf_class=tree.leaf_class[leaves].astype(np.int32),
+        n_classes=tree.n_classes,
+    )
+
+
+# ---------------------------------------------------------------------------
+# pure-jnp reference predictors (oracles for the Pallas kernel)
+# ---------------------------------------------------------------------------
+
+def decisions_quantized(x8, feature, threshold, bits, margin):
+    """Comparator array under the dual approximation.
+
+    x8: (B, F) int32 master codes; feature (N,), threshold (N,) float,
+    bits (N,) int32 in [2,8], margin (N,) int32 in [-5,5].
+    Returns bool (B, N).
+    """
+    t_int = quant.threshold_to_int(threshold, bits)
+    t_sub = quant.substitute(t_int, margin, bits)
+    x_gathered = x8[:, feature]                      # (B, N)
+    x_p = quant.inputs_at_precision(x_gathered, bits)
+    return x_p > t_sub[None, :]
+
+
+def leaves_from_decisions(decisions, path, path_len):
+    """decisions bool (B, N) -> leaf index (B,) via the path matmul."""
+    d = decisions.astype(jnp.float32)
+    score = d @ path.astype(jnp.float32).T           # (B, L): (+1 hits) - (-1 hits)
+    # satisfied leaf: (+1 hits) + (#neg - (-1 hits)) == path_len
+    # score + n_neg == path_len  <=>  score - (path_len - n_neg) == 0 (max)
+    target = (path_len - (path == -1).sum(axis=1)).astype(jnp.float32)
+    return jnp.argmax(score - target[None, :], axis=1)
+
+
+def predict_quantized(x8, ptree_arrays, bits, margin):
+    """Full reference pipeline; ptree_arrays is a dict of jnp arrays."""
+    d = decisions_quantized(
+        x8,
+        ptree_arrays["feature"],
+        ptree_arrays["threshold"],
+        bits,
+        margin,
+    )
+    leaf = leaves_from_decisions(d, ptree_arrays["path"], ptree_arrays["path_len"])
+    return ptree_arrays["leaf_class"][leaf]
+
+
+def ptree_to_jnp(pt: ParallelTree) -> dict:
+    return {
+        "feature": jnp.asarray(pt.feature),
+        "threshold": jnp.asarray(pt.threshold),
+        "path": jnp.asarray(pt.path),
+        "path_len": jnp.asarray(pt.path_len),
+        "n_neg": jnp.asarray(pt.n_neg),
+        "leaf_class": jnp.asarray(pt.leaf_class),
+    }
+
+
+def predict_descent_quantized(x8, tree: TreeArrays, bits_full, margin_full):
+    """Oracle #2: sequential descent with quantized comparators (numpy).
+
+    bits_full/margin_full are per-*node* arrays aligned with tree arrays
+    (entries at leaf positions ignored). Cross-checks the parallel form.
+    """
+    x8 = np.asarray(x8)
+    n = x8.shape[0]
+    node = np.zeros(n, dtype=np.int64)
+    bits_full = np.asarray(bits_full)
+    margin_full = np.asarray(margin_full)
+    for _ in range(tree.n_nodes):
+        f = tree.feature[node]
+        active = f >= 0
+        if not active.any():
+            break
+        p = bits_full[node]
+        t_int = np.floor(tree.threshold[node] * (2.0 ** p)).astype(np.int64)
+        t_int = np.clip(t_int, 0, (1 << p) - 1)
+        t_sub = np.clip(t_int + margin_full[node], 0, (1 << p) - 1)
+        xv = x8[np.arange(n), np.maximum(f, 0)] >> (8 - p)
+        go_right = xv > t_sub
+        nxt = np.where(go_right, tree.right[node], tree.left[node])
+        node = np.where(active, nxt, node)
+    return tree.leaf_class[node].astype(np.int32)

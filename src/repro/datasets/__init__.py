@@ -1,0 +1,23 @@
+"""Dataset substrate.
+
+The paper evaluates on 10 UCI datasets. UCI is unreachable offline, so this
+package generates deterministic synthetic datasets with the *same signature*
+(n_samples, n_features, n_classes, feature discreteness) as each UCI dataset.
+Relative claims (area/power reduction at bounded accuracy loss) are scale-free
+w.r.t. the exact data distribution; see DESIGN.md §2.
+"""
+from repro.datasets.synthetic import (
+    DATASET_SPECS,
+    Dataset,
+    load_dataset,
+    train_test_split,
+    quantize_u8,
+)
+
+__all__ = [
+    "DATASET_SPECS",
+    "Dataset",
+    "load_dataset",
+    "train_test_split",
+    "quantize_u8",
+]

@@ -1,0 +1,57 @@
+"""Pallas TPU kernel: NSGA-II pairwise domination matrix (blocked O(P^2)).
+
+Fast non-dominated sort needs dom[i, j] = all(o_i <= o_j) & any(o_i < o_j)
+for the combined 2P pool every generation. For production population sizes
+(P up to tens of thousands sharded per device) the P x P boolean matrix is
+the dominant VPU cost; this kernel tiles it (block_i x block_j) in VMEM with
+the (small, static) objective count unrolled.
+
+Output is f32 {0., 1.} — downstream reductions (domination counts) are sums,
+and f32 keeps the 8x128 VPU lanes dense.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(obj_i_ref, obj_j_ref, out_ref, *, n_obj: int):
+    # obj_i_ref: (block_i, M) f32; obj_j_ref: (block_j, M) f32
+    le = None
+    lt = None
+    for k in range(n_obj):  # static unroll over objectives
+        a = obj_i_ref[:, k][:, None]     # (block_i, 1)
+        b = obj_j_ref[:, k][None, :]     # (1, block_j)
+        le_k = a <= b
+        lt_k = a < b
+        le = le_k if le is None else (le & le_k)
+        lt = lt_k if lt is None else (lt | lt_k)
+    out_ref[...] = (le & lt).astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_i", "block_j", "interpret"))
+def domination_matrix(
+    objs,  # (P, M) f32, P % block == 0 after padding
+    *,
+    block_i: int = 256,
+    block_j: int = 256,
+    interpret: bool = False,
+):
+    """dom (P, P) f32: dom[i, j] = 1 iff i dominates j (minimization)."""
+    p, m = objs.shape
+    grid = (p // block_i, p // block_j)
+    kernel = functools.partial(_kernel, n_obj=m)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_i, m), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_j, m), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_i, block_j), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((p, p), jnp.float32),
+        interpret=interpret,
+    )(objs, objs)

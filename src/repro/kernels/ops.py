@@ -1,0 +1,156 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+Handle padding to MXU-aligned tiles, operand preparation (one-hot selector /
+path matrices, per-chromosome threshold decode) and CPU fallback: on a CPU
+backend the kernels execute with ``interpret=True`` (the Pallas interpreter
+runs the kernel body in Python), on TPU they compile to Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import quant
+from repro.core.tree import ParallelTree
+from repro.kernels import domination as _dom
+from repro.kernels import qmatmul as _qmm
+from repro.kernels import tree_infer as _ti
+
+
+def _auto_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x, mult, axis, value=0.0):
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+# ---------------------------------------------------------------------------
+# tree_infer
+# ---------------------------------------------------------------------------
+
+def prepare_tree_operands(pt: ParallelTree, n_features: int):
+    """Static (per-tree) operands for the fused inference kernel, padded.
+
+    Padding is correctness-preserving:
+      - SEL extra columns are all-zero -> x_sel = 0, thr pad = 2^8 so the
+        padded comparator always outputs 0;
+      - PATH pad rows/cols are zero; target pad = -1 is unsatisfiable, so
+        padded leaves never fire; padded classes never win argmax.
+    """
+    n, l, c = pt.n_comparators, pt.n_leaves, pt.n_classes
+    sel = np.zeros((n_features, n), np.float32)
+    sel[pt.feature, np.arange(n)] = 1.0
+    path_t = pt.path.T.astype(np.float32)                    # (N, L)
+    target = (pt.path_len - pt.n_neg).astype(np.float32)[None]  # (1, L)
+    cls1h = np.zeros((l, c), np.float32)
+    cls1h[np.arange(l), pt.leaf_class] = 1.0
+
+    sel = _pad_to(_pad_to(jnp.asarray(sel), 128, 0), 128, 1)
+    path_t = _pad_to(_pad_to(jnp.asarray(path_t), 128, 0), 128, 1)
+    target = _pad_to(jnp.asarray(target), 128, 1, value=-1.0)
+    cls1h = _pad_to(_pad_to(jnp.asarray(cls1h), 128, 0), 128, 1)
+    return sel, path_t, target, cls1h
+
+
+def decode_population(threshold, genes):
+    """Per-chromosome kernel operands from real-coded genes.
+
+    threshold (N,) float; genes (P, 2N). Returns scale (P, N), thr (P, N) f32.
+    """
+    bits, margin = quant.decode_genes(genes)                  # (P, N) each
+    t_int = quant.threshold_to_int(threshold[None, :], bits)
+    t_sub = quant.substitute(t_int, margin, bits)
+    scale = jnp.exp2(-(8 - bits).astype(jnp.float32))
+    return scale, t_sub.astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def tree_infer_predict(x8, pt_operands, scale, thr, *, block_b=256, interpret=None):
+    """(P, B) predicted classes for a population of approximate trees.
+
+    x8 (B, F) int; pt_operands from prepare_tree_operands (already padded);
+    scale/thr (P, N_padded-able).
+    """
+    interpret = _auto_interpret() if interpret is None else interpret
+    sel, path_t, target, cls1h = pt_operands
+    x8f = _pad_to(_pad_to(x8.astype(jnp.float32), block_b, 0), 128, 1)
+    x8f = x8f[:, : sel.shape[0]]
+    n = sel.shape[1]
+    scale = _pad_to(scale, n, 1)[:, :n]
+    # padded comparators must never fire: thr pad = 256 > any x_p
+    thr = _pad_to(thr, n, 1, value=256.0)[:, :n]
+    scores = _ti.tree_infer_scores(
+        x8f, sel, scale, thr, path_t, target, cls1h,
+        block_b=block_b, interpret=interpret,
+    )
+    return jnp.argmax(scores[:, : x8.shape[0], :], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# domination
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def domination_matrix(objs, *, block=256, interpret=None):
+    """(P, P) f32 domination matrix; accepts any P (pads internally).
+
+    Padding rows are +inf objectives: they never dominate anything real and
+    the returned matrix is cropped back to (P, P).
+    """
+    interpret = _auto_interpret() if interpret is None else interpret
+    p = objs.shape[0]
+    blk = min(block, max(128, 1 << (p - 1).bit_length()))
+    objs_p = _pad_to(objs.astype(jnp.float32), blk, 0, value=jnp.inf)
+    dom = _dom.domination_matrix(
+        objs_p, block_i=blk, block_j=blk, interpret=interpret
+    )
+    return dom[:p, :p]
+
+
+def domination_matrix_bool(objs, *, interpret=None):
+    """Adapter with the core.nsga2 signature (bool output)."""
+    return domination_matrix(objs, interpret=interpret) > 0.5
+
+
+# ---------------------------------------------------------------------------
+# qmatmul
+# ---------------------------------------------------------------------------
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_n", "block_k", "interpret")
+)
+def qmatmul(x, w_q, scale, *, block_m=256, block_n=256, block_k=512,
+            interpret=None):
+    """Mixed-precision matmul with padding to MXU tiles.
+
+    x (M, K) f32/bf16; w_q (K, N) int8 codes; scale (N,) or (1, N) f32.
+    Returns (M, N) f32.
+    """
+    interpret = _auto_interpret() if interpret is None else interpret
+    m, k = x.shape
+    _, n = w_q.shape
+    scale = scale.reshape(1, -1)
+    bm, bn, bk = (min(block_m, _ceil_mult(m)), min(block_n, _ceil_mult(n)),
+                  min(block_k, _ceil_mult(k)))
+    xp = _pad_to(_pad_to(x, bm, 0), bk, 1)
+    wp = _pad_to(_pad_to(w_q, bk, 0), bn, 1)
+    sp = _pad_to(scale, bn, 1)
+    out = _qmm.qmatmul(xp, wp, sp, block_m=bm, block_n=bn, block_k=bk,
+                       interpret=interpret)
+    return out[:m, :n]
+
+
+def _ceil_mult(size, base=128):
+    """Smallest multiple of `base` >= min(size_rounded, base*8)."""
+    r = ((size + base - 1) // base) * base
+    return max(base, min(r, base * 8))

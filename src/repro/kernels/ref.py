@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for every Pallas kernel (bit-exact references)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_infer_scores(x8f, sel, scale, thr, path_t, target, cls1h):
+    """Oracle for kernels.tree_infer.tree_infer_scores. Same padded operands.
+
+    x8f (B, F) f32; sel (F, N); scale/thr (P, N); path_t (N, L);
+    target (1, L); cls1h (L, C). Returns (P, B, C) f32.
+    """
+    x_sel = x8f @ sel                                     # (B, N)
+    x_p = jnp.floor(x_sel[None] * scale[:, None, :])      # (P, B, N)
+    d = (x_p > thr[:, None, :]).astype(jnp.float32)
+    score = jnp.einsum("pbn,nl->pbl", d, path_t)
+    sat = (score == target[None]).astype(jnp.float32)
+    return jnp.einsum("pbl,lc->pbc", sat, cls1h)
+
+
+def domination_matrix(objs):
+    """Oracle for kernels.domination.domination_matrix. objs (P, M) -> f32."""
+    a = objs[:, None, :]
+    b = objs[None, :, :]
+    dom = jnp.all(a <= b, axis=-1) & jnp.any(a < b, axis=-1)
+    return dom.astype(jnp.float32)
+
+
+def qmatmul(x, w_q, scale):
+    """Oracle for kernels.qmatmul.qmatmul."""
+    return (x.astype(jnp.float32) @ w_q.astype(jnp.float32)) * scale
+
+
+def flash_attention(q, k, v, group=1, softcap=0.0):
+    """Oracle for kernels.flash_attn.flash_attention: plain causal softmax
+    attention with GQA via head grouping. q (H,Sq,hd); k/v (Hkv,Skv,hd)."""
+    h, sq, hd = q.shape
+    k_rep = jnp.repeat(k, group, axis=0)
+    v_rep = jnp.repeat(v, group, axis=0)
+    sc = jnp.einsum("hqd,hkd->hqk", q.astype(jnp.float32),
+                    k_rep.astype(jnp.float32)) * (hd ** -0.5)
+    if softcap > 0:
+        sc = jnp.tanh(sc / softcap) * softcap
+    skv = k.shape[1]
+    mask = jnp.arange(sq)[:, None] >= jnp.arange(skv)[None, :]
+    sc = jnp.where(mask[None], sc, -1e30)
+    p = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("hqk,hkd->hqd", p, v_rep.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,89 @@
+"""Pallas TPU kernel: fused approximate-DT inference (the paper's hot loop).
+
+The GA evaluates `population x test_set` predictions every generation. This
+kernel computes one (chromosome, batch-block) cell of that product with the
+*parallel bespoke circuit* dataflow (DESIGN.md §2), fully gather-free so every
+step lands on the MXU / VPU:
+
+    x_sel   = X8 @ SEL            feature gather as one-hot matmul  (MXU)
+    x_p     = floor(x_sel * 2^-(8-p))   per-comparator precision    (VPU)
+    d       = x_p > t'                   comparator array           (VPU)
+    score   = d @ PATH^T                 path matmul                (MXU)
+    sat     = (score == target)          leaf decode                (VPU)
+    cls     = argmax(sat @ CLS1H)        class one-hot reduce       (MXU)
+
+Block layout (VMEM): the tree tensors (SEL: F x N, PATH: L x N, CLS1H: L x C)
+are small (N, L <= 1024 after padding) and stay resident; the batch is tiled
+by `block_b` rows. Grid = (population, batch_blocks): each chromosome's
+per-comparator (shift_scale, threshold) vector is a [1, N] VMEM tile indexed
+by the population coordinate.
+
+All integer quantities are exact in f32 (values < 2^24), so MXU execution is
+bit-exact vs the integer reference in `repro.kernels.ref`.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, sel_ref, scale_ref, thr_ref, path_ref, target_ref,
+            cls1h_ref, out_ref):
+    # x_ref:      (block_b, F)   f32   master 8-bit codes
+    # sel_ref:    (F, N)         f32   one-hot feature selector
+    # scale_ref:  (1, N)         f32   2^-(8-p) per comparator (this chromosome)
+    # thr_ref:    (1, N)         f32   substituted integer threshold t'
+    # path_ref:   (N, L)         f32   path matrix transpose, entries {-1,0,1}
+    # target_ref: (1, L)         f32   path_len - n_neg
+    # cls1h_ref:  (L, C)         f32   leaf -> class one-hot
+    # out_ref:    (block_b, C)   f32   per-class satisfied-leaf counts
+    x = x_ref[...]
+    x_sel = jax.lax.dot(x, sel_ref[...], precision=jax.lax.Precision.HIGHEST)
+    x_p = jnp.floor(x_sel * scale_ref[...])
+    d = (x_p > thr_ref[...]).astype(jnp.float32)
+    score = jax.lax.dot(d, path_ref[...], precision=jax.lax.Precision.HIGHEST)
+    sat = (score == target_ref[...]).astype(jnp.float32)
+    out_ref[0, :, :] = jax.lax.dot(sat, cls1h_ref[...],
+                                   precision=jax.lax.Precision.HIGHEST)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_b", "interpret")
+)
+def tree_infer_scores(
+    x8f,      # (B, F)  f32 master codes (padded: B % block_b == 0, F % 128 == 0)
+    sel,      # (F, N)  f32
+    scale,    # (P, N)  f32 per-chromosome shift scales
+    thr,      # (P, N)  f32 per-chromosome substituted thresholds
+    path_t,   # (N, L)  f32
+    target,   # (1, L)  f32
+    cls1h,    # (L, C)  f32
+    *,
+    block_b: int = 256,
+    interpret: bool = False,
+):
+    """Returns per-class scores (P, B, C); argmax over C = predicted class."""
+    n_pop = scale.shape[0]
+    b, f = x8f.shape
+    n = sel.shape[1]
+    l, c = cls1h.shape
+    grid = (n_pop, b // block_b)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, f), lambda p, i: (i, 0)),
+            pl.BlockSpec((f, n), lambda p, i: (0, 0)),
+            pl.BlockSpec((1, n), lambda p, i: (p, 0)),
+            pl.BlockSpec((1, n), lambda p, i: (p, 0)),
+            pl.BlockSpec((n, l), lambda p, i: (0, 0)),
+            pl.BlockSpec((1, l), lambda p, i: (0, 0)),
+            pl.BlockSpec((l, c), lambda p, i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_b, c), lambda p, i: (p, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_pop, b, c), jnp.float32),
+        interpret=interpret,
+    )(x8f, sel, scale, thr, path_t, target, cls1h)

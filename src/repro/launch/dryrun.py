@@ -1,0 +1,323 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST stay the first statements in this module (before
+any jax import): jax locks the device count at first init, and the dry-run
+needs 512 placeholder host devices to build the production meshes
+(16x16 single-pod, 2x16x16 multi-pod). Smoke tests and benches import other
+modules and keep seeing 1 device.
+
+Per cell this:
+  1. builds ShapeDtypeStruct stand-ins for params/optimizer/caches/batch
+     (no allocation),
+  2. jit-lowers the step (train_step / prefill_step / serve_step) with the
+     sharding spec trees from repro.sharding.params,
+  3. compiled = lowered.compile()  — sharding mismatches / OOM / unsupported
+     collectives fail HERE, which is the point,
+  4. records memory_analysis(), cost_analysis() and an HLO collective-bytes
+     breakdown into benchmarks/results/dryrun/<mesh>/<arch>__<shape>.json.
+
+Resumable: existing result files are skipped unless --force.
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, SHAPES, get_config, shapes_for
+from repro.data.pipeline import make_batch_specs
+from repro.launch.mesh import make_production_mesh, rules_for
+from repro.models import lm, transformer
+from repro.optim import get_optimizer
+from repro.runtime import train as train_rt
+from repro.runtime import serve as serve_rt
+from repro.sharding import params as sp
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "benchmarks", "results", "dryrun")
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b([a-z]\d*[a-z0-9]*)\[([\d,]*)\]")
+
+
+def _bytes_of_shapes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Sum result-shape bytes per collective op kind (per-device HLO)."""
+    stats = {k: {"count": 0, "bytes": 0} for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if "=" not in stripped:
+            continue
+        rhs = stripped.split("=", 1)[1]
+        for kind in _COLLECTIVES:
+            # result type sits between '=' and the ' kind(' occurrence
+            m = re.search(rf"\s{kind}(-start)?\(", rhs)
+            if m:
+                stats[kind]["count"] += 1
+                stats[kind]["bytes"] += _bytes_of_shapes(rhs[: m.start()])
+                break
+    stats["total_bytes"] = sum(v["bytes"] for k, v in stats.items()
+                               if isinstance(v, dict))
+    return stats
+
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _sds(shape_tree, shard_tree):
+    return jax.tree.map(
+        lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s),
+        shape_tree, shard_tree)
+
+
+def build_cell(arch: str, shape_name: str, mesh):
+    """Returns (fn, arg_sds tuple, donate) for the cell."""
+    cfg = get_config(arch)
+    rules = rules_for(mesh)
+    shape_cfg = SHAPES[shape_name]
+
+    params_shapes = jax.eval_shape(
+        lambda k: transformer.init_params(k, cfg), jax.random.PRNGKey(0))
+    pspecs = sp.param_specs(cfg, rules, mesh)
+
+    if shape_cfg.kind == "train":
+        opt = get_optimizer(cfg)
+        state_shapes = jax.eval_shape(
+            lambda p: train_rt.init_train_state(p, opt), params_shapes)
+        sspecs = sp.train_state_specs(cfg, rules, mesh, opt.name)
+        batch_shapes = make_batch_specs(cfg, shape_cfg)
+        bspecs = sp.batch_specs(cfg, rules, mesh, batch_shapes)
+        fn = train_rt.make_train_step(cfg, rules=rules, optimizer=opt)
+        args = (_sds(state_shapes, _named(mesh, sspecs)),
+                _sds(batch_shapes, _named(mesh, bspecs)))
+        return fn, args, (0,)
+
+    if shape_cfg.kind == "prefill":
+        batch_shapes = make_batch_specs(cfg, shape_cfg)
+        bspecs = sp.batch_specs(cfg, rules, mesh, batch_shapes)
+        fn = serve_rt.make_prefill_step(cfg, rules=rules)
+        args = (_sds(params_shapes, _named(mesh, pspecs)),
+                _sds(batch_shapes, _named(mesh, bspecs)))
+        return fn, args, ()
+
+    # decode: one token against an s_max cache
+    b, s_max = shape_cfg.global_batch, shape_cfg.seq_len
+    cache_shapes = jax.eval_shape(
+        lambda: lm.init_caches(cfg, b, s_max, rules=rules))
+    cspecs = sp.cache_specs(cfg, rules, mesh, cache_shapes)
+    token = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    tok_spec = sp.batch_specs(cfg, rules, mesh, {"t": token})["t"]
+    fn = serve_rt.make_serve_step(cfg, rules=rules)
+    args = (_sds(params_shapes, _named(mesh, pspecs)),
+            jax.ShapeDtypeStruct(token.shape, token.dtype,
+                                 sharding=NamedSharding(mesh, tok_spec)),
+            _sds(cache_shapes, _named(mesh, cspecs)),
+            jax.ShapeDtypeStruct((), jnp.int32))
+    return fn, args, (2,)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
+             force: bool = False) -> dict:
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    os.makedirs(os.path.join(out_dir, mesh_name), exist_ok=True)
+    out_path = os.path.join(out_dir, mesh_name, f"{arch}__{shape_name}.json")
+    if os.path.exists(out_path) and not force:
+        with open(out_path) as f:
+            return json.load(f)
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    record = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+              "n_devices": int(np.prod(list(mesh.shape.values())))}
+    t0 = time.time()
+    try:
+        fn, args, donate = build_cell(arch, shape_name, mesh)
+        with mesh:
+            jitted = jax.jit(fn, donate_argnums=donate)
+            lowered = jitted.lower(*args)
+            record["lower_s"] = round(time.time() - t0, 2)
+            t1 = time.time()
+            compiled = lowered.compile()
+            record["compile_s"] = round(time.time() - t1, 2)
+            mem = compiled.memory_analysis()
+            record["memory"] = {
+                "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+                "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+                "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+                "alias_bytes": int(getattr(mem, "alias_size_in_bytes", 0)),
+                "code_bytes": int(getattr(mem, "generated_code_size_in_bytes", 0)),
+            }
+            cost = compiled.cost_analysis()
+            if isinstance(cost, (list, tuple)):
+                cost = cost[0]
+            record["cost"] = {
+                "flops": float(cost.get("flops", -1)),
+                "bytes_accessed": float(cost.get("bytes accessed", -1)),
+            }
+            hlo = compiled.as_text()
+            record["collectives"] = collective_stats(hlo)
+            # loop-aware accounting: XLA cost_analysis counts while bodies
+            # once; scanned layer stacks need trip-count multipliers
+            # (repro.launch.hlo_analysis, validated in EXPERIMENTS.md)
+            from repro.launch import hlo_analysis
+            la = hlo_analysis.analyze(hlo)
+            record["loop_aware"] = {
+                "flops": la["flops"],
+                "bytes": la["bytes"],
+                "collectives": la["collectives"],
+            }
+            # keep the compressed HLO so analyses can rerun without
+            # recompiling (the hillclimb loop's "profile")
+            import gzip
+            hlo_path = out_path.replace(".json", ".hlo.gz")
+            with gzip.open(hlo_path, "wt") as hf:
+                hf.write(hlo)
+            record["status"] = "ok"
+    except Exception as e:  # noqa: BLE001 — failures are data here
+        record["status"] = "fail"
+        record["error"] = f"{type(e).__name__}: {e}"
+        record["traceback"] = traceback.format_exc()[-4000:]
+    with open(out_path, "w") as f:
+        json.dump(record, f, indent=1)
+    return record
+
+
+def run_ga_cell(multi_pod: bool, out_dir: str, force: bool = False) -> dict:
+    """The paper's own workload at production scale: one island-model
+    NSGA-II round (local generations + ring migration) for a HAR-scale
+    approximate-DT search, one island per data-rank (256/512 chips)."""
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    os.makedirs(os.path.join(out_dir, mesh_name), exist_ok=True)
+    out_path = os.path.join(out_dir, mesh_name, "paper-dt-ga__islands.json")
+    if os.path.exists(out_path) and not force:
+        with open(out_path) as f:
+            return json.load(f)
+
+    from repro.datasets import load_dataset
+    from repro.core.train import train_tree
+    from repro.core.tree import to_parallel
+    from repro.core import approx, dist, nsga2
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    record = {"arch": "paper-dt-ga", "shape": "islands", "mesh": mesh_name,
+              "n_devices": int(np.prod(list(mesh.shape.values())))}
+    t0 = time.time()
+    try:
+        ds = load_dataset("pendigits")
+        tree = train_tree(ds.x_train, ds.y_train, ds.n_classes)
+        pt = to_parallel(tree)
+        prob = approx.build_problem(pt, ds.x_test, ds.y_test)
+        fit = approx.make_fitness_fn(prob)
+        cfg = dist.IslandConfig(local_pop=32, migrate_every=4, n_migrate=4)
+        n_islands = mesh.shape["data"]
+        step = dist.make_island_step(fit, mesh, cfg, axis="data")
+        total = n_islands * cfg.local_pop
+        state_sds = nsga2.NSGA2State(
+            genes=jax.ShapeDtypeStruct((total, prob.n_genes), jnp.float32),
+            objs=jax.ShapeDtypeStruct((total, 2), jnp.float32),
+            rank=jax.ShapeDtypeStruct((total,), jnp.int32),
+            crowd=jax.ShapeDtypeStruct((total,), jnp.float32),
+            key=jax.ShapeDtypeStruct((n_islands, 2), jnp.uint32),
+            generation=jax.ShapeDtypeStruct((), jnp.int32),
+        )
+        with mesh:
+            lowered = step.lower(state_sds)
+            record["lower_s"] = round(time.time() - t0, 2)
+            t1 = time.time()
+            compiled = lowered.compile()
+            record["compile_s"] = round(time.time() - t1, 2)
+            mem = compiled.memory_analysis()
+            record["memory"] = {
+                "argument_bytes": int(mem.argument_size_in_bytes),
+                "temp_bytes": int(mem.temp_size_in_bytes),
+                "output_bytes": int(mem.output_size_in_bytes),
+            }
+            cost = compiled.cost_analysis()
+            if isinstance(cost, (list, tuple)):
+                cost = cost[0]
+            record["cost"] = {"flops": float(cost.get("flops", -1))}
+            record["collectives"] = collective_stats(compiled.as_text())
+            record["n_comparators"] = pt.n_comparators
+            record["global_population"] = total
+            record["status"] = "ok"
+    except Exception as e:  # noqa: BLE001
+        record["status"] = "fail"
+        record["error"] = f"{type(e).__name__}: {e}"
+        record["traceback"] = traceback.format_exc()[-4000:]
+    with open(out_path, "w") as f:
+        json.dump(record, f, indent=1)
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None,
+                    choices=ARCH_IDS + ["all", "paper-dt-ga"])
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    out_dir = args.out or os.path.abspath(RESULTS_DIR)
+
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    if args.arch == "paper-dt-ga":
+        for mp in meshes:
+            rec = run_ga_cell(mp, out_dir, force=args.force)
+            print(f"[{'OK' if rec['status'] == 'ok' else 'FAIL'}]   "
+                  f"paper-dt-ga islands {rec['mesh']} "
+                  f"{rec.get('error', '')[:140]}", flush=True)
+        return
+    archs = ARCH_IDS if args.arch in (None, "all") else [args.arch]
+    for arch in archs:
+        cfg = get_config(arch)
+        shapes = shapes_for(cfg) if args.shape == "all" else [args.shape]
+        for shape in shapes:
+            for mp in meshes:
+                rec = run_cell(arch, shape, mp, out_dir, force=args.force)
+                mesh_name = rec["mesh"]
+                if rec["status"] == "ok":
+                    mem_gb = (rec["memory"]["argument_bytes"]
+                              + rec["memory"]["temp_bytes"]) / 2**30
+                    print(f"[OK]   {arch:18s} {shape:12s} {mesh_name:10s} "
+                          f"compile={rec.get('compile_s', 0):7.1f}s "
+                          f"mem/dev={mem_gb:6.2f}GiB "
+                          f"GFLOP/dev={rec['cost']['flops'] / 1e9:9.1f} "
+                          f"coll={rec['collectives']['total_bytes'] / 2**20:8.1f}MiB",
+                          flush=True)
+                else:
+                    print(f"[FAIL] {arch:18s} {shape:12s} {mesh_name:10s} "
+                          f"{rec['error'][:160]}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Production meshes. v5e pod = 16x16 = 256 chips; multi-pod = 2 pods.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state — the dry-run sets XLA_FLAGS before first init.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.sharding.rules import MeshRules, RULES_2D, RULES_3D
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def rules_for(mesh) -> MeshRules:
+    import dataclasses
+    base = RULES_3D if "pod" in mesh.axis_names else RULES_2D
+    return dataclasses.replace(base, mesh=mesh)
+
+
+def make_host_mesh(n: int | None = None, axes=("data",)):
+    """Small CPU mesh for tests/examples (host platform devices)."""
+    import numpy as np
+    devs = jax.devices()
+    n = n or len(devs)
+    per = n // len(axes) if len(axes) > 1 else n
+    shape = tuple([per] * len(axes)) if len(axes) > 1 else (n,)
+    return jax.sharding.Mesh(np.array(devs[:int(np.prod(shape))]).reshape(shape), axes)

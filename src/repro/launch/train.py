@@ -1,0 +1,94 @@
+"""Production training launcher: mesh + sharded state + checkpointed loop.
+
+On real hardware this is the per-process entry point (jax.distributed
+initializes from the TPU environment); on this container it drives reduced
+configs end-to-end with the same code path (see examples/lm_train.py for a
+guided version with crash/resume).
+
+    PYTHONPATH=src python -m repro.launch.train --arch gemma-2b \
+        --reduced --steps 20 --ckpt-dir /tmp/run1
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+
+from repro.configs import ARCH_IDS, get_config, reduced_config
+from repro.data import SyntheticLMData
+from repro.launch.mesh import make_host_mesh, make_production_mesh, rules_for
+from repro.models import transformer
+from repro.optim import get_optimizer, warmup_cosine_schedule
+from repro.runtime import checkpoint, train
+from repro.sharding import params as sp
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma-2b", choices=ARCH_IDS)
+    ap.add_argument("--reduced", action="store_true",
+                    help="reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--production-mesh", action="store_true",
+                    help="16x16 mesh (needs 256 devices)")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced_config(cfg)
+    if args.production_mesh:
+        mesh = make_production_mesh()
+        rules = rules_for(mesh)
+    else:
+        mesh = make_host_mesh()
+        rules = None
+
+    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    opt = get_optimizer(cfg, schedule=warmup_cosine_schedule(
+        1e-3, 10, args.steps))
+    if rules is not None:
+        pspecs = sp.param_specs(cfg, rules, mesh)
+        params = jax.tree.map(
+            lambda a, s: jax.device_put(a, NamedSharding(mesh, s)),
+            params, pspecs)
+    state = train.init_train_state(params, opt)
+    step_fn = jax.jit(train.make_train_step(cfg, rules=rules, optimizer=opt))
+
+    start = 0
+    if args.ckpt_dir and (last := checkpoint.latest_step(args.ckpt_dir)) is not None:
+        state, start = checkpoint.restore(args.ckpt_dir, last, state)
+        print(f"resumed from checkpoint step {start}")
+
+    n_text = args.seq - cfg.prefix_len
+    data = SyntheticLMData(cfg.vocab_size, n_text, args.batch, seed=0)
+    t0 = time.time()
+    with mesh:
+        for step in range(start, args.steps):
+            batch = {"tokens": jnp.asarray(data.batch(step)["tokens"])}
+            if cfg.prefix_len:
+                batch["prefix_embed"] = jnp.zeros(
+                    (args.batch, cfg.prefix_len, cfg.d_model), jnp.float32)
+            state, metrics = step_fn(state, batch)
+            if args.ckpt_dir and step % args.ckpt_every == 0:
+                checkpoint.save(args.ckpt_dir, step, state)
+            if step % 5 == 0:
+                print(f"step {step:5d} loss {float(metrics['loss']):.4f} "
+                      f"({(time.time() - t0) / max(step - start + 1, 1):.2f} s/step)",
+                      flush=True)
+    if args.ckpt_dir:
+        checkpoint.save(args.ckpt_dir, args.steps - 1, state)
+    print(f"done: {args.steps - start} steps, "
+          f"final loss {float(metrics['loss']):.4f}")
+
+
+if __name__ == "__main__":
+    main()

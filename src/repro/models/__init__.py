@@ -1,0 +1,3 @@
+from repro.models import attention, common, lm, mlp, moe, ssm, transformer
+
+__all__ = ["attention", "common", "lm", "mlp", "moe", "ssm", "transformer"]

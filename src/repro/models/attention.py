@@ -1,0 +1,187 @@
+"""GQA/MQA attention with RoPE, flash-style chunked prefill, KV-cache decode.
+
+TPU adaptations:
+  - prefill never materializes the (S, S) score matrix: online-softmax scan
+    over KV chunks (memory O(S * chunk)), MXU-shaped einsums;
+  - GQA with TP > n_kv: KV heads are repeated by `kv_repeat` (resolved in
+    sharding.rules.head_sharding) so the effective KV head dim shards over
+    the model axis — the repeat is a broadcast (no extra projection FLOPs),
+    only the cache pays the factor, as in production TP serving;
+  - decode attends over the full preallocated cache with a position mask.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import apply_rope, normal_init
+from repro.sharding.rules import maybe_shard
+
+NEG_INF = -1e30
+
+
+def init_attention(key, cfg, dtype):
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    std = d ** -0.5
+    return {
+        "wq": normal_init(k1, (d, h, hd), std, dtype),
+        "wk": normal_init(k2, (d, kv, hd), std, dtype),
+        "wv": normal_init(k3, (d, kv, hd), std, dtype),
+        "wo": normal_init(k4, (h, hd, d), (h * hd) ** -0.5, dtype),
+    }
+
+
+def _group_query(q, kv_eff):
+    """(B, S, H, hd) -> (B, S, KVe, G, hd) with head h -> group h // G."""
+    b, s, h, hd = q.shape
+    return q.reshape(b, s, kv_eff, h // kv_eff, hd)
+
+
+def _softcap(scores, cap):
+    if cap and cap > 0:
+        return jnp.tanh(scores / cap) * cap
+    return scores
+
+
+def _attn_shard_spec(rules, mode):
+    heads_ax = rules.model if (rules and mode == "sharded") else None
+    batch_ax = rules.batch if rules else None
+    return batch_ax, heads_ax
+
+
+def chunked_prefill_attention(cfg, q, k, v, *, chunk=1024, softcap=0.0,
+                              rules=None, mode="replicated"):
+    """Causal flash-style attention.
+
+    q (B, S, KVe, G, hd); k, v (B, S, KVe, hd). Returns (B, S, KVe, G, hd).
+    Scans KV chunks with a running (max, sum, acc) — never builds (S, S).
+    """
+    b, s, kve, g, hd = q.shape
+    scale = hd ** -0.5
+    n_chunks = s // chunk
+    kc = k.reshape(b, n_chunks, chunk, kve, hd)
+    vc = v.reshape(b, n_chunks, chunk, kve, hd)
+    q_pos = jnp.arange(s)
+
+    def body(carry, inputs):
+        m, l, acc = carry
+        idx, k_blk, v_blk = inputs
+        kv_pos = idx * chunk + jnp.arange(chunk)
+        # scores: (B, KVe, G, S, chunk)
+        sc = jnp.einsum("bskgh,bckh->bkgsc", q.astype(jnp.float32),
+                        k_blk.astype(jnp.float32)) * scale
+        sc = _softcap(sc, softcap)
+        mask = q_pos[:, None] >= kv_pos[None, :]
+        sc = jnp.where(mask[None, None, None], sc, NEG_INF)
+        m_new = jnp.maximum(m, sc.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(sc - m_new[..., None])
+        l_new = l * alpha + p.sum(axis=-1)
+        # probs in [0,1]: model-dtype (bf16) for the PV matmul — halves the
+        # biggest flash buffer; accumulate in f32 (§Perf iteration)
+        pv = jnp.einsum("bkgsc,bckh->bkgsh", p.astype(v_blk.dtype), v_blk,
+                        preferred_element_type=jnp.float32)
+        acc_new = acc * alpha[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, kve, g, s), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, kve, g, s), jnp.float32)
+    a0 = jnp.zeros((b, kve, g, s, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0),
+        (jnp.arange(n_chunks), kc.transpose(1, 0, 2, 3, 4),
+         vc.transpose(1, 0, 2, 3, 4)),
+    )
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.transpose(0, 3, 1, 2, 4).astype(q.dtype)  # (B, S, KVe, G, hd)
+
+
+def decode_attention(q, k_cache, v_cache, length, *, softcap=0.0):
+    """One-token attention over the preallocated cache.
+
+    q (B, 1, KVe, G, hd); caches (B, S_max, KVe, hd); length int32 = #valid.
+    """
+    s_max = k_cache.shape[1]
+    sc = jnp.einsum("bqkgh,bskh->bkgqs", q.astype(jnp.float32),
+                    k_cache.astype(jnp.float32)) * (q.shape[-1] ** -0.5)
+    sc = _softcap(sc, softcap)
+    valid = jnp.arange(s_max)[None, None, None, None, :] < length
+    sc = jnp.where(valid, sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", p, v_cache.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def attention_block(params, cfg, x, positions, *, mode, kv_repeat, rules,
+                    cache=None, cache_pos=None, cache_layer=None,
+                    prefill_chunk=512):
+    """Full attention sub-block.
+
+    Train/prefill: cache=None (returns this block's fresh (k, v)).
+    Decode: cache=(k_stack, v_stack) — the FULL (L, B, S_max, KVe, hd)
+    stacked caches; the new token is written in place at
+    (cache_layer, :, cache_pos) with one tiny dynamic_update_slice (no
+    functional per-layer cache copies — see DESIGN.md §5 decode memory).
+    Returns (out, new (k, v) stacks).
+    """
+    b, s, _ = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    wk, wv = params["wk"], params["wv"]
+    if cache is None and kv_repeat > 1:
+        # WEIGHT-side KV repeat (§Perf iteration): projecting straight into
+        # the tp-shardable kv_eff head space avoids the replicated->head-
+        # sharded activation reshard the SPMD partitioner handles with a
+        # full rematerialization (repeat of a small weight is free).
+        wk = jnp.repeat(wk, kv_repeat, axis=1)
+        wv = jnp.repeat(wv, kv_repeat, axis=1)
+    k = jnp.einsum("bsd,dhk->bshk", x, wk)
+    v = jnp.einsum("bsd,dhk->bshk", x, wv)
+
+    batch_ax, heads_ax = _attn_shard_spec(rules, mode)
+    # replicated-head archs (MQA / odd head counts): shard the *query
+    # sequence* over the model axis instead (context-parallel flash) so the
+    # (S, chunk) score blocks and the softmax accumulators stay 1/tp-sized;
+    # K/V must stay full-sequence for causal attention (they are small).
+    seq_ax = None
+    if rules is not None and mode == "replicated" and cache is None \
+            and s % rules.tp == 0:
+        seq_ax = rules.model
+    q = maybe_shard(q, (batch_ax, seq_ax, heads_ax, None), rules)
+
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    if cache is None:
+        # k/v are already in kv_eff head space (weight-side repeat above);
+        # the RETURNED cache keeps TRUE KV heads (decode caches are
+        # seq-sharded instead) via a strided head slice.
+        kv_eff = cfg.n_kv_heads * kv_repeat
+        k_rep = maybe_shard(k, (batch_ax, None, heads_ax, None), rules)
+        v_rep = maybe_shard(v, (batch_ax, None, heads_ax, None), rules)
+        qg = _group_query(q, kv_eff)
+        out = chunked_prefill_attention(
+            cfg, qg, k_rep, v_rep, chunk=min(prefill_chunk, s),
+            softcap=cfg.attn_softcap, rules=rules, mode=mode)
+        new_kv = (k_rep[:, :, ::kv_repeat], v_rep[:, :, ::kv_repeat]) \
+            if kv_repeat > 1 else (k_rep, v_rep)
+    else:
+        # decode: true-KV cache, SEQUENCE-sharded over the model axis
+        # (context-parallel decode). GQA handled by query grouping — no
+        # repeat, so the cache never pays the kv_repeat factor.
+        qg = _group_query(q, max(cfg.n_kv_heads, 1))
+        k_stack, v_stack = cache
+        layer = cache_layer if cache_layer is not None else 0
+        start = (layer, 0, cache_pos, 0, 0)
+        k_stack = jax.lax.dynamic_update_slice(k_stack, k[None], start)
+        v_stack = jax.lax.dynamic_update_slice(v_stack, v[None], start)
+        k_l = jax.lax.dynamic_index_in_dim(k_stack, layer, 0, keepdims=False)
+        v_l = jax.lax.dynamic_index_in_dim(v_stack, layer, 0, keepdims=False)
+        out = decode_attention(qg, k_l, v_l, cache_pos + s,
+                               softcap=cfg.attn_softcap)
+        new_kv = (k_stack, v_stack)
+
+    out = out.reshape(b, s, cfg.n_heads, cfg.head_dim)
+    out = maybe_shard(out, (batch_ax, None, heads_ax, None), rules)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return y, new_kv

@@ -1,0 +1,83 @@
+"""Shared model pieces: norms, RoPE, activations, init helpers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def normal_init(key, shape, std, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms — computed in f32, cast back to input dtype
+# ---------------------------------------------------------------------------
+
+def init_norm(cfg, dtype):
+    p = {"w": jnp.zeros((cfg.d_model,), dtype)
+         if cfg.norm == "rms1p" else jnp.ones((cfg.d_model,), dtype)}
+    if cfg.norm == "layer":
+        p["b"] = jnp.zeros((cfg.d_model,), dtype)
+    return p
+
+
+def apply_norm(p, x, kind: str, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if kind == "layer":
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + eps)
+        out = out * p["w"].astype(jnp.float32) + p["b"].astype(jnp.float32)
+    else:
+        ms = (xf * xf).mean(-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(ms + eps)
+        w = p["w"].astype(jnp.float32)
+        out = out * (1.0 + w) if kind == "rms1p" else out * w
+    return out.astype(x.dtype)
+
+
+def norm_like(p, arbitrary_dim_w, x, kind, eps: float = 1e-6):
+    """RMSNorm over an arbitrary trailing dim (SSM gated norm)."""
+    xf = x.astype(jnp.float32)
+    ms = (xf * xf).mean(-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(ms + eps) * arbitrary_dim_w.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x (..., S, H, hd); positions (..., S) int32."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_frequencies(hd, theta), jnp.float32)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., :, None, :]   # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# activations
+# ---------------------------------------------------------------------------
+
+def activation(name: str):
+    if name in ("swiglu", "silu"):
+        return jax.nn.silu
+    if name in ("geglu", "gelu"):
+        return lambda x: jax.nn.gelu(x, approximate=True)
+    if name == "relu2":
+        return lambda x: jnp.square(jax.nn.relu(x))
+    raise ValueError(name)
+
+
+def is_glu(name: str) -> bool:
+    return name in ("swiglu", "geglu")

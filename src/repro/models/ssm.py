@@ -1,0 +1,184 @@
+"""Mamba2 (SSD — state-space duality) layer: chunked train/prefill + O(1)
+decode recurrence.
+
+TPU adaptations (DESIGN.md):
+  - the SSD block-decomposition runs as a `lax.scan` over sequence chunks
+    carrying the running (nh, hd, n) state; the intra-chunk term only
+    materializes (B, Q, Q, nh_shard) per step, so HBM stays bounded at 500k
+    context and the contractions are MXU einsums. SSD internals in f32.
+  - projections are stored as SEPARATE weight blocks (z / x / BC / dt)
+    instead of one fused in_proj: the fused layout would be sliced across
+    shard boundaries (segments don't align with the 16-way model axis) and
+    GSPMD would all-gather the whole activation. Separate blocks keep the
+    d_inner/head dims cleanly sharded end-to-end (z, x, dt, conv channels,
+    SSD heads), with only the tiny B/C (2*state) replicated.
+
+Single B/C group (n_groups=1), matching mamba2-1.3b / zamba2.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import normal_init, norm_like
+from repro.sharding.rules import maybe_shard
+
+
+def conv_channels(cfg) -> int:
+    return cfg.d_inner + 2 * cfg.ssm_state
+
+
+def init_ssm(key, cfg, dtype):
+    d = cfg.d_model
+    keys = jax.random.split(key, 6)
+    nh, n, di = cfg.ssm_nheads, cfg.ssm_state, cfg.d_inner
+    std = d ** -0.5
+    return {
+        "z_proj": normal_init(keys[0], (d, di), std, dtype),
+        "x_proj": normal_init(keys[1], (d, di), std, dtype),
+        "bc_proj": normal_init(keys[2], (d, 2 * n), std, dtype),
+        "dt_proj": normal_init(keys[3], (d, nh), std, dtype),
+        "conv_x_w": normal_init(keys[4], (cfg.ssm_conv, di), 0.2, dtype),
+        "conv_x_b": jnp.zeros((di,), dtype),
+        "conv_bc_w": normal_init(keys[5], (cfg.ssm_conv, 2 * n), 0.2, dtype),
+        "conv_bc_b": jnp.zeros((2 * n,), dtype),
+        "a_log": jnp.zeros((nh,), jnp.float32),            # A = -exp(a_log) = -1
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm_w": jnp.ones((di,), dtype),
+        "out_proj": normal_init(keys[3], (di, d), di ** -0.5, dtype),
+    }
+
+
+def _causal_depthwise_conv(x, w, b):
+    """x (B, S, C); w (K, C); left-pad K-1 — causal depthwise conv."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = xp[:, 0:x.shape[1], :] * w[0]
+    for i in range(1, k):
+        out = out + xp[:, i:i + x.shape[1], :] * w[i]
+    return out + b
+
+
+def ssd_chunked(xh, dt, a, b_, c_, d_skip, chunk):
+    """SSD forward. xh (B,S,NH,HD) f32; dt (B,S,NH) f32 (post-softplus);
+    a (NH,) negative; b_/c_ (B,S,N) f32. Returns y (B,S,NH,HD) f32 and the
+    final state (B,NH,HD,N)."""
+    bsz, s, nh, hd = xh.shape
+    n = b_.shape[-1]
+    q = min(chunk, s)
+    nc = s // q
+    xc = xh.reshape(bsz, nc, q, nh, hd)
+    dtc = dt.reshape(bsz, nc, q, nh)
+    bc = b_.reshape(bsz, nc, q, n)
+    cc = c_.reshape(bsz, nc, q, n)
+    tril = jnp.tril(jnp.ones((q, q), bool))
+
+    def step(state, inp):
+        xq, dtq, bq, cq = inp                   # (B,q,nh,hd) (B,q,nh) (B,q,n)
+        da = dtq * a                            # (B,q,nh)
+        cum = jnp.cumsum(da, axis=1)            # (B,q,nh)
+        # intra-chunk: y_i += sum_{j<=i} (C_i.B_j) exp(cum_i - cum_j) dt_j x_j
+        # the (B,Q,Q,NH) weight block is the SSD memory hot-spot: compute the
+        # exp/cumsum in f32 but MATERIALIZE the block in bf16 (values in
+        # [0, 1] x gate; the einsum accumulates in f32) — §Perf iteration.
+        diff = cum[:, :, None, :] - cum[:, None, :, :]      # (B,i,j,nh)
+        decay = jnp.where(tril[None, :, :, None], jnp.exp(diff), 0.0)
+        scores = jnp.einsum("bin,bjn->bij", cq, bq)
+        w = (scores[..., None] * decay * dtq[:, None, :, :]).astype(jnp.bfloat16)
+        y = jnp.einsum("bijh,bjhp->bihp", w, xq.astype(jnp.bfloat16),
+                       preferred_element_type=jnp.float32)
+        # prior-state contribution: C_i . state decayed from chunk start
+        y = y + jnp.einsum("bin,bhpn,bih->bihp", cq, state, jnp.exp(cum))
+        # state update: decay full chunk + inject inputs decayed to chunk end
+        end_decay = jnp.exp(cum[:, -1, None, :] - cum)      # (B,j,nh)
+        state = state * jnp.exp(cum[:, -1, :])[:, :, None, None] \
+            + jnp.einsum("bjn,bjh,bjhp->bhpn", bq, dtq * end_decay, xq)
+        return state, y
+
+    state0 = jnp.zeros((bsz, nh, hd, n), jnp.float32)
+    xs = (xc.transpose(1, 0, 2, 3, 4), dtc.transpose(1, 0, 2, 3),
+          bc.transpose(1, 0, 2, 3), cc.transpose(1, 0, 2, 3))
+    state, ys = jax.lax.scan(step, state0, xs)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(bsz, s, nh, hd)
+    y = y + d_skip[None, None, :, None] * xh
+    return y, state
+
+
+def ssm_block(params, cfg, x, rules=None, cache=None, cache_layer=None,
+              chunk=256):
+    """Full Mamba2 block. cache None -> train/prefill (returns final state);
+    decode: cache = (conv_stack (L,B,K-1,C), state_stack (L,B,NH,HD,N)) with
+    in-place per-layer updates at cache_layer (see attention_block note).
+    The conv cache packs [x | B | C] channels (x part sharded over model).
+    """
+    bsz, s, _ = x.shape
+    di, n, nh, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_nheads, cfg.ssm_head_dim
+    batch_ax = rules.batch if rules else None
+    inner_ax = rules.model if rules else None
+
+    z = jnp.einsum("bsd,de->bse", x, params["z_proj"])
+    xin = jnp.einsum("bsd,de->bse", x, params["x_proj"])
+    bc = jnp.einsum("bsd,de->bse", x, params["bc_proj"])
+    dt = jnp.einsum("bsd,de->bse", x, params["dt_proj"])
+    z = maybe_shard(z, (batch_ax, None, inner_ax), rules)
+    xin = maybe_shard(xin, (batch_ax, None, inner_ax), rules)
+    dt = maybe_shard(dt, (batch_ax, None, inner_ax), rules)
+
+    layer = cache_layer if cache_layer is not None else 0
+    if cache is None:
+        conv_x = _causal_depthwise_conv(xin, params["conv_x_w"],
+                                        params["conv_x_b"])
+        conv_bc = _causal_depthwise_conv(bc, params["conv_bc_w"],
+                                         params["conv_bc_b"])
+        k = cfg.ssm_conv
+        tail = jnp.concatenate([xin, bc], axis=-1)[:, -(k - 1):, :]
+        new_conv = tail if s >= k - 1 else jnp.pad(
+            jnp.concatenate([xin, bc], axis=-1), ((0, 0), (k - 1 - s, 0), (0, 0)))
+    else:
+        conv_stack, state_stack = cache
+        conv_state = jax.lax.dynamic_index_in_dim(conv_stack, layer, 0,
+                                                  keepdims=False)
+        window_x = jnp.concatenate([conv_state[..., :di], xin], axis=1)
+        window_bc = jnp.concatenate([conv_state[..., di:], bc], axis=1)
+        conv_x = (jnp.einsum("bkc,kc->bc", window_x, params["conv_x_w"])
+                  + params["conv_x_b"])[:, None, :]
+        conv_bc = (jnp.einsum("bkc,kc->bc", window_bc, params["conv_bc_w"])
+                   + params["conv_bc_b"])[:, None, :]
+        new_conv = jnp.concatenate([window_x[:, 1:, :], window_bc[:, 1:, :]],
+                                   axis=-1)
+
+    conv_x = jax.nn.silu(conv_x.astype(jnp.float32))
+    conv_bc = jax.nn.silu(conv_bc.astype(jnp.float32))
+    b_ = conv_bc[..., :n]
+    c_ = conv_bc[..., n:]
+
+    xh = conv_x.reshape(bsz, s, nh, hd)
+    xh = maybe_shard(xh, (batch_ax, None, inner_ax, None), rules)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    a = -jnp.exp(params["a_log"])
+
+    if cache is None:
+        y, final_state = ssd_chunked(xh, dt, a, b_, c_, params["d_skip"], chunk)
+        new_cache = (new_conv, final_state)
+    else:
+        conv_stack, state_stack = cache
+        ssm_state = jax.lax.dynamic_index_in_dim(state_stack, layer, 0,
+                                                 keepdims=False)
+        da = dt[:, 0, :] * a                                    # (B,nh)
+        inject = jnp.einsum("bn,bh,bhp->bhpn", b_[:, 0], dt[:, 0], xh[:, 0])
+        ssm_state = ssm_state * jnp.exp(da)[:, :, None, None] + inject
+        y = jnp.einsum("bn,bhpn->bhp", c_[:, 0], ssm_state)
+        y = y + params["d_skip"][None, :, None] * xh[:, 0]
+        y = y[:, None]                                          # (B,1,nh,hd)
+        conv_stack = jax.lax.dynamic_update_index_in_dim(
+            conv_stack, new_conv[None], layer, 0)
+        state_stack = jax.lax.dynamic_update_index_in_dim(
+            state_stack, ssm_state[None], layer, 0)
+        new_cache = (conv_stack, state_stack)
+
+    y = y.reshape(bsz, s, di).astype(x.dtype)
+    y = maybe_shard(y, (batch_ax, None, inner_ax), rules)
+    z = jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    y = norm_like(params, params["norm_w"], y * z, cfg.norm)
+    return jnp.einsum("bsi,id->bsd", y, params["out_proj"]), new_cache

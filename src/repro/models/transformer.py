@@ -1,0 +1,282 @@
+"""Model assembly: embeddings, scanned layer stacks, caches, decode.
+
+One code path serves all 10 assigned architectures:
+
+  dense/audio/vlm  : [attn + mlp] x L            (scan over stacked params)
+  moe              : [attn + moe] x L            (+ load-balance aux loss)
+  ssm              : [mamba2] x L
+  hybrid (zamba2)  : super-blocks of `shared_attn_every` mamba2 layers
+                     followed by one of `n_shared_blocks` *shared* attn+mlp
+                     blocks (alternating), + a tail of plain mamba2 layers
+
+Layers are scanned (`lax.scan` over stacked params) to bound HLO size and
+compile time at 48-81 layers; bodies are rematerialized when cfg.remat
+(nothing_saveable policy — the residual stream itself is the only saved
+activation, sequence-sharded over the model axis per DESIGN.md §5).
+Caches: attention (L, B, S_max, KVe, hd) k/v pairs; SSM (L, B, K-1, C) conv +
+(L, B, NH, HD, N) states; zamba additionally keeps per-invocation KV caches
+for the shared blocks.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, mlp, moe, ssm
+from repro.models.common import apply_norm, init_norm, normal_init
+from repro.sharding.rules import head_sharding, maybe_shard
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def layer_kind(cfg) -> str:
+    if cfg.family == "moe":
+        return "attn_moe"
+    if cfg.family in ("ssm", "hybrid"):
+        return "ssm"
+    return "attn_mlp"
+
+
+def _init_attn_mlp(key, cfg, dtype, use_moe: bool):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": init_norm(cfg, dtype),
+        "attn": attention.init_attention(k1, cfg, dtype),
+        "ln2": init_norm(cfg, dtype),
+        "ffn": moe.init_moe(k2, cfg, dtype) if use_moe
+        else mlp.init_mlp(k3, cfg, dtype),
+    }
+
+
+def _init_layer(key, cfg, dtype):
+    kind = layer_kind(cfg)
+    if kind == "ssm":
+        k1, _ = jax.random.split(key)
+        return {"ln1": init_norm(cfg, dtype), "ssm": ssm.init_ssm(k1, cfg, dtype)}
+    return _init_attn_mlp(key, cfg, dtype, use_moe=(kind == "attn_moe"))
+
+
+def init_params(key, cfg, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    keys = jax.random.split(key, 5)
+    vp, d = cfg.padded_vocab, cfg.d_model
+    params = {
+        "embed": normal_init(keys[0], (vp, d), 0.02, dtype),
+        "final_norm": init_norm(cfg, dtype),
+    }
+    layer_keys = jax.random.split(keys[1], cfg.n_layers)
+    params["layers"] = jax.vmap(
+        lambda k: _init_layer(k, cfg, dtype))(layer_keys)
+    if cfg.family == "hybrid" and cfg.n_shared_blocks:
+        sh_keys = jax.random.split(keys[2], cfg.n_shared_blocks)
+        params["shared"] = jax.vmap(
+            lambda k: _init_attn_mlp(k, cfg, dtype, use_moe=False))(sh_keys)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = normal_init(keys[3], (vp, d), d ** -0.5, dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+def _attn_mlp_block(p, cfg, x, positions, *, rules, mode, kv_repeat,
+                    cache=None, cache_pos=None, cache_layer=None,
+                    use_moe=False):
+    """Returns (x_out, new_kv, aux_loss)."""
+    h, new_kv = attention.attention_block(
+        p["attn"], cfg, apply_norm(p["ln1"], x, cfg.norm), positions,
+        mode=mode, kv_repeat=kv_repeat, rules=rules,
+        cache=cache, cache_pos=cache_pos, cache_layer=cache_layer)
+    x = x + h
+    z = apply_norm(p["ln2"], x, cfg.norm)
+    if use_moe:
+        ff, aux = moe.moe_block(p["ffn"], cfg, z, rules)
+    else:
+        ff, aux = mlp.mlp_block(p["ffn"], cfg, z, rules), jnp.float32(0.0)
+    return x + ff, new_kv, aux
+
+
+def _ssm_layer(p, cfg, x, *, rules, cache=None, cache_layer=None):
+    h, new_cache = ssm.ssm_block(p["ssm"], cfg,
+                                 apply_norm(p["ln1"], x, cfg.norm),
+                                 rules=rules, cache=cache,
+                                 cache_layer=cache_layer)
+    return x + h, new_cache
+
+
+def hybrid_layout(cfg):
+    """(n_super, per_super, tail) decomposition of the zamba2 stack."""
+    every = cfg.shared_attn_every
+    n_super = cfg.n_layers // every
+    return n_super, every, cfg.n_layers - n_super * every
+
+
+def _tree_slice(tree, sl):
+    return jax.tree.map(lambda a: a[sl], tree)
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def forward(params, cfg, tokens, *, rules=None, prefix_embed=None,
+            caches=None, pos0=None):
+    """Shared forward for train / prefill (caches=None: fresh caches are
+    returned) and decode (caches given: one-token step at position pos0).
+
+    tokens (B, S_text) int32; prefix_embed (B, P, D) for vlm.
+    Returns (hidden (B, S, D), new_caches, aux_loss).
+    """
+    x = params["embed"][tokens]                    # gather (B, S_text, D)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    if prefix_embed is not None:
+        x = jnp.concatenate([prefix_embed.astype(x.dtype), x], axis=1)
+    b, s, _ = x.shape
+
+    decoding = caches is not None
+    if decoding:
+        positions = jnp.zeros((b, 1), jnp.int32) + pos0
+    else:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    mode, kv_repeat = head_sharding(cfg, rules)
+    seq_ok = (not decoding) and rules is not None and s % rules.tp == 0
+    res_spec = None if rules is None else \
+        (rules.batch, rules.seq if seq_ok else None, None)
+
+    def shard_res(h):
+        return maybe_shard(h, res_spec, rules) if res_spec else h
+
+    x = shard_res(x)
+    kind = layer_kind(cfg)
+    new_caches = {}
+    aux_total = jnp.float32(0.0)
+    remat = cfg.remat and not decoding
+
+    def maybe_remat(fn):
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.nothing_saveable) if remat else fn
+
+    if kind in ("attn_mlp", "attn_moe"):
+        use_moe = kind == "attn_moe"
+
+        if decoding:
+            # fori over layers, caches updated IN PLACE on the stacked
+            # arrays (one tiny dynamic_update_slice per layer) — a scan
+            # carrying caches as xs/ys would functionally copy them.
+            def dec_body(l, carry):
+                h, kv = carry
+                p = _tree_slice(params["layers"], l)
+                h, kv, _ = _attn_mlp_block(
+                    p, cfg, h, positions, rules=rules, mode=mode,
+                    kv_repeat=kv_repeat, cache=kv, cache_pos=pos0,
+                    cache_layer=l, use_moe=use_moe)
+                return (shard_res(h), kv)
+
+            x, kv = jax.lax.fori_loop(0, cfg.n_layers, dec_body,
+                                      (x, caches["kv"]))
+            new_caches["kv"] = kv
+        else:
+            def body(carry, p):
+                h, aux = carry
+                h, kv, a = _attn_mlp_block(
+                    p, cfg, h, positions, rules=rules, mode=mode,
+                    kv_repeat=kv_repeat, use_moe=use_moe)
+                return (shard_res(h), aux + a), kv
+
+            (x, aux_total), kv = jax.lax.scan(
+                maybe_remat(body), (x, aux_total), params["layers"])
+            new_caches["kv"] = kv
+
+    elif cfg.family == "ssm":
+        if decoding:
+            def dec_body(l, carry):
+                h, c = carry
+                p = _tree_slice(params["layers"], l)
+                h, c = _ssm_layer(p, cfg, h, rules=rules, cache=c,
+                                  cache_layer=l)
+                return (shard_res(h), c)
+
+            x, c = jax.lax.fori_loop(0, cfg.n_layers, dec_body,
+                                     (x, caches["ssm"]))
+            new_caches["ssm"] = c
+        else:
+            def body(h, p):
+                h, c = _ssm_layer(p, cfg, h, rules=rules)
+                return shard_res(h), c
+
+            x, c = jax.lax.scan(maybe_remat(body), x, params["layers"])
+            new_caches["ssm"] = c
+
+    else:  # hybrid (zamba2)
+        n_super, per_super, tail = hybrid_layout(cfg)
+
+        if decoding:
+            # flat caches: ssm over all n_layers, shared kv per invocation
+            def ssm_at(l, carry):
+                h, ssm_c, shared_kv = carry
+                p = _tree_slice(params["layers"], l)
+                h, ssm_c = _ssm_layer(p, cfg, h, rules=rules, cache=ssm_c,
+                                      cache_layer=l)
+                return (shard_res(h), ssm_c, shared_kv)
+
+            def super_dec(sb, carry):
+                carry = jax.lax.fori_loop(
+                    sb * per_super, (sb + 1) * per_super, ssm_at, carry)
+                h, ssm_c, shared_kv = carry
+                shared_p = _tree_slice(params["shared"],
+                                       sb % cfg.n_shared_blocks)
+                h, shared_kv, _ = _attn_mlp_block(
+                    shared_p, cfg, h, positions, rules=rules, mode=mode,
+                    kv_repeat=kv_repeat, cache=shared_kv, cache_pos=pos0,
+                    cache_layer=sb, use_moe=False)
+                return (shard_res(h), ssm_c, shared_kv)
+
+            carry = (x, caches["ssm"], caches["shared_kv"])
+            carry = jax.lax.fori_loop(0, n_super, super_dec, carry)
+            carry = jax.lax.fori_loop(n_super * per_super, cfg.n_layers,
+                                      ssm_at, carry)
+            x, ssm_c, shared_kv = carry
+            new_caches["ssm"] = ssm_c
+            new_caches["shared_kv"] = shared_kv
+        else:
+            main = _tree_slice(params["layers"], slice(0, n_super * per_super))
+            main = jax.tree.map(
+                lambda a: a.reshape(n_super, per_super, *a.shape[1:]), main)
+            tail_p = _tree_slice(params["layers"],
+                                 slice(n_super * per_super, cfg.n_layers))
+
+            def inner(h, p):
+                h, c = _ssm_layer(p, cfg, h, rules=rules)
+                return shard_res(h), c
+
+            def super_body(h, inp):
+                p_grp, idx = inp
+                h, ssm_c = jax.lax.scan(inner, h, p_grp)
+                shared_p = _tree_slice(params["shared"],
+                                       idx % cfg.n_shared_blocks)
+                h, kv, _ = _attn_mlp_block(
+                    shared_p, cfg, h, positions, rules=rules, mode=mode,
+                    kv_repeat=kv_repeat, use_moe=False)
+                return shard_res(h), (ssm_c, kv)
+
+            idxs = jnp.arange(n_super)
+            x, (ssm_c, kv) = jax.lax.scan(maybe_remat(super_body), x,
+                                          (main, idxs))
+            new_caches["ssm_main"] = ssm_c
+            new_caches["shared_kv"] = kv
+            if tail:
+                x, tc = jax.lax.scan(maybe_remat(inner), x, tail_p)
+                new_caches["ssm_tail"] = tc
+
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    return x, new_caches, aux_total
+
+
+def logits_from_hidden(params, cfg, hidden):
+    table = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    return jnp.einsum("bsd,vd->bsv", hidden, table)

@@ -1,0 +1,10 @@
+from repro.optim.optimizers import (
+    adamw, adafactor, get_optimizer, clip_by_global_norm,
+    warmup_cosine_schedule,
+)
+from repro.optim import compress
+
+__all__ = [
+    "adamw", "adafactor", "get_optimizer", "clip_by_global_norm",
+    "warmup_cosine_schedule", "compress",
+]

@@ -1,0 +1,9 @@
+from repro.quantize.bespoke import (
+    snap_lut, quantize_tensor, dequantize_tensor, tensor_cost,
+    quantizable_tensors, make_lm_quant_problem, apply_chromosome,
+)
+
+__all__ = [
+    "snap_lut", "quantize_tensor", "dequantize_tensor", "tensor_cost",
+    "quantizable_tensors", "make_lm_quant_problem", "apply_chromosome",
+]

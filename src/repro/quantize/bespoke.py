@@ -1,0 +1,135 @@
+"""The paper's dual approximation generalized to LM weights (DESIGN.md §5).
+
+Per quantizable tensor, two genes — exactly the comparator chromosome layout:
+  precision gene  -> bits in [2, 8]   (symmetric per-output-channel codes)
+  margin gene     -> snap window m in [0, 5]
+
+Hardware-friendly snapping: each integer code moves (within +/-m) to the code
+with minimal CSD-like multiplier cost — popcount(|code|) — mirroring the
+paper's move-threshold-to-cheap-bit-pattern. In bespoke/printed MACs (and in
+shift-add TPU-adjacent datapaths) the multiplier cost tracks the number of
+non-zero bits of the constant; the analogue of the paper's Fig. 4 LUT.
+
+Objectives (both minimized, as in the paper):
+  f1 = quantized-model CE loss - float CE loss   (accuracy loss)
+  f2 = sum_t size_t * (alpha * bits_t + popcount cost) / float_cost
+
+The quantized forward executes through kernels.qmatmul (int8 codes + scales),
+so the search optimizes exactly what the serving path runs.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant as core_quant
+
+
+@functools.lru_cache(maxsize=64)
+def snap_lut(bits: int, margin: int) -> np.ndarray:
+    """code (two's complement int in [-2^(b-1), 2^(b-1)-1]) -> snapped code."""
+    lo, hi = -(1 << (bits - 1)), (1 << (bits - 1)) - 1
+    out = np.zeros(1 << bits, dtype=np.int32)
+    for code in range(lo, hi + 1):
+        best, best_key = code, (bin(abs(code)).count("1"), 0)
+        for d in range(-margin, margin + 1):
+            c = code + d
+            if c < lo or c > hi:
+                continue
+            key = (bin(abs(c)).count("1"), abs(d))
+            if key < best_key:
+                best, best_key = c, key
+        out[code - lo] = best
+    return out  # index by (code - lo)
+
+
+def quantize_tensor(w, bits: int, margin: int):
+    """w (.., K, N) float -> (codes int8, scale (.., 1, N) f32)."""
+    wf = np.asarray(w, np.float32)
+    amax = np.max(np.abs(wf), axis=-2, keepdims=True)
+    scale = np.maximum(amax, 1e-9) / ((1 << (bits - 1)) - 1)
+    codes = np.clip(np.round(wf / scale), -(1 << (bits - 1)),
+                    (1 << (bits - 1)) - 1).astype(np.int32)
+    if margin > 0:
+        lut = snap_lut(bits, margin)
+        codes = lut[codes + (1 << (bits - 1))]
+    return codes.astype(np.int8), scale.astype(np.float32)
+
+
+def dequantize_tensor(codes, scale):
+    return codes.astype(np.float32) * scale
+
+
+def tensor_cost(codes, bits: int, alpha: float = 0.5) -> float:
+    """Mixed memory (bits) + multiplier (popcount) cost, per tensor."""
+    pop = np.unpackbits(np.abs(codes.astype(np.int16)).astype(np.uint8)
+                        [..., None], axis=-1).sum()
+    return alpha * codes.size * bits / 8.0 + (1 - alpha) * float(pop) / 8.0
+
+
+def quantizable_tensors(params) -> list[tuple[str, tuple]]:
+    """All >=2D weight tensors (matmul operands) with their tree paths."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(params)
+    out = []
+    for path, leaf in flat:
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        if leaf.ndim >= 2 and "norm" not in name and "conv" not in name:
+            out.append((name, path))
+    return out
+
+
+def apply_chromosome(params, genes: np.ndarray):
+    """Decode (2T,) genes and return (quantized params, total cost).
+
+    Quantization-aware float emulation: weights are replaced by their
+    dequantized values, so any model forward evaluates the approximate
+    network (and kernels.qmatmul runs the same codes at serving time).
+    """
+    tensors = quantizable_tensors(params)
+    span_p = core_quant.MAX_BITS - core_quant.MIN_BITS + 1
+    bits = (core_quant.MIN_BITS
+            + np.clip(np.floor(genes[0::2] * span_p), 0, span_p - 1)
+            ).astype(int)
+    margins = np.clip(np.floor(genes[1::2] * 6), 0, 5).astype(int)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    name_to_idx = {}
+    for i, (name, _) in enumerate(tensors):
+        name_to_idx[name] = i
+    new_leaves = []
+    total_cost = 0.0
+    float_cost = 0.0
+    for path, leaf in flat:
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        if name in name_to_idx:
+            i = name_to_idx[name]
+            codes, scale = quantize_tensor(leaf, int(bits[i]), int(margins[i]))
+            total_cost += tensor_cost(codes, int(bits[i]))
+            float_cost += leaf.size * 2.0  # bf16 bytes baseline
+            new_leaves.append(jnp.asarray(dequantize_tensor(codes, scale),
+                                          dtype=leaf.dtype))
+        else:
+            new_leaves.append(leaf)
+    qparams = jax.tree_util.tree_unflatten(treedef, new_leaves)
+    return qparams, total_cost / max(float_cost, 1e-9)
+
+
+def make_lm_quant_problem(params, cfg, batch, loss_fn):
+    """Fitness closure for NSGA-II over per-tensor (bits, margin) genes."""
+    base_loss = float(loss_fn(params, batch))
+    n_tensors = len(quantizable_tensors(params))
+
+    def fitness_np(pop: np.ndarray) -> np.ndarray:
+        objs = np.zeros((pop.shape[0], 2), np.float32)
+        for i, genes in enumerate(pop):
+            qparams, cost = apply_chromosome(params, np.asarray(genes))
+            loss = float(loss_fn(qparams, batch))
+            objs[i] = (loss - base_loss, cost)
+        return objs
+
+    return fitness_np, 2 * n_tensors, base_loss

@@ -1,0 +1,3 @@
+from repro.runtime import checkpoint, serve, train
+
+__all__ = ["checkpoint", "serve", "train"]

@@ -1,0 +1,44 @@
+"""Serving runtime: batched prefill + decode loops with preallocated caches.
+
+`serve_step` (one decode token against an s_max cache) is what the decode_*
+dry-run cells lower; `generate` drives a full prefill + N-token decode for
+the examples and tests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+
+
+def make_prefill_step(cfg, rules=None):
+    def prefill_step(params, batch):
+        return lm.prefill(params, cfg, batch, rules=rules)
+    return prefill_step
+
+
+def make_serve_step(cfg, rules=None):
+    """One-token decode: (params, token (B,1), caches, pos) -> (logits, caches)."""
+    def serve_step(params, token, caches, pos):
+        return lm.decode_step(params, cfg, token, caches, pos, rules=rules)
+    return serve_step
+
+
+def generate(params, cfg, prompt_batch, n_tokens: int, s_max: int,
+             rules=None, greedy: bool = True, key=None):
+    """Prefill the prompt then decode n_tokens autoregressively."""
+    logits, caches = lm.prefill(params, cfg, prompt_batch, rules=rules)
+    caches = lm.extend_caches(cfg, caches, s_max)
+    prompt_len = prompt_batch["tokens"].shape[1] + (
+        prompt_batch.get("prefix_embed").shape[1]
+        if prompt_batch.get("prefix_embed") is not None else 0)
+
+    serve_step = jax.jit(make_serve_step(cfg, rules))
+    tok = jnp.argmax(logits[:, -1, :cfg.vocab_size], axis=-1)[:, None]
+    out = [tok]
+    for i in range(n_tokens - 1):
+        logits, caches = serve_step(params, tok, caches, jnp.int32(prompt_len + i))
+        tok = jnp.argmax(logits[:, -1, :cfg.vocab_size], axis=-1)[:, None]
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)

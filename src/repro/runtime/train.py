@@ -1,0 +1,75 @@
+"""Train step factory: loss + grads + optimizer update, with gradient
+accumulation (microbatch scan — lets XLA overlap per-microbatch reduce-
+scatter with the next microbatch's compute) and global-norm clipping."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+from repro.optim import clip_by_global_norm, get_optimizer
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: dict
+    opt_state: dict
+    step: jnp.ndarray
+
+
+jax.tree_util.register_pytree_node(
+    TrainState,
+    lambda s: ((s.params, s.opt_state, s.step), None),
+    lambda _, c: TrainState(*c),
+)
+
+
+def init_train_state(params, optimizer) -> TrainState:
+    return TrainState(params, optimizer.init(params), jnp.int32(0))
+
+
+def make_train_step(cfg, rules=None, optimizer=None, max_grad_norm: float = 1.0):
+    optimizer = optimizer or get_optimizer(cfg)
+
+    def loss_fn(params, batch):
+        loss, metrics = lm.lm_loss(params, cfg, batch, rules=rules)
+        return loss, metrics
+
+    def compute_grads(params, batch):
+        if cfg.grad_accum <= 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+            return loss, metrics, grads
+
+        n = cfg.grad_accum
+        acc_dtype = jnp.dtype(cfg.grad_accum_dtype)
+        micro = jax.tree.map(
+            lambda a: a.reshape(n, a.shape[0] // n, *a.shape[1:]), batch)
+
+        def body(carry, mb):
+            loss_sum, grads_sum = carry
+            (loss, _), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, mb)
+            grads_sum = jax.tree.map(
+                lambda a, g: a + g.astype(acc_dtype), grads_sum, grads)
+            return (loss_sum + loss, grads_sum), None
+
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, acc_dtype), params)
+        (loss_sum, grads), _ = jax.lax.scan(body, (jnp.float32(0.0), zeros),
+                                            micro)
+        inv = 1.0 / n
+        grads = jax.tree.map(lambda g: g * inv, grads)
+        return loss_sum * inv, {"ce_loss": loss_sum * inv}, grads
+
+    def train_step(state: TrainState, batch):
+        loss, metrics, grads = compute_grads(state.params, batch)
+        grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+        new_params, new_opt = optimizer.update(
+            grads, state.opt_state, state.params, state.step)
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm)
+        return TrainState(new_params, new_opt, state.step + 1), metrics
+
+    return train_step

@@ -1,0 +1,3 @@
+from repro.sharding.rules import MeshRules, maybe_shard, RULES_1D, RULES_2D, RULES_3D
+
+__all__ = ["MeshRules", "maybe_shard", "RULES_1D", "RULES_2D", "RULES_3D"]

@@ -1,0 +1,218 @@
+"""Parameter / optimizer-state / cache PartitionSpec trees.
+
+Specs are derived from the param pytree structure (path + shape) under a
+MeshRules instance, with divisibility checks everywhere: a dim is sharded
+over a mesh-axis group only when its size divides the group size — otherwise
+it falls back to replication (recorded hillclimb levers in DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.models import transformer
+from repro.runtime.train import TrainState
+from repro.sharding.rules import MeshRules, head_sharding
+
+
+def _axes_size(mesh_shape: dict, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return mesh_shape[axes]
+    return int(np.prod([mesh_shape[a] for a in axes]))
+
+
+def _axis_if(size: int, axes, mesh_shape):
+    if axes is None:
+        return None
+    n = _axes_size(mesh_shape, axes)
+    if n > 1 and size % n == 0:
+        return axes if isinstance(axes, str) else tuple(axes)
+    return None
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+def param_specs(cfg, rules: MeshRules | None, mesh):
+    """PartitionSpec pytree matching transformer.init_params(cfg)."""
+    shapes = jax.eval_shape(
+        lambda k: transformer.init_params(k, cfg), jax.random.PRNGKey(0))
+    if rules is None:
+        return jax.tree.map(lambda _: P(), shapes)
+    ms = dict(mesh.shape)
+    mode, kv_repeat = head_sharding(cfg, rules)
+    mdl = rules.model
+
+    # expert-dim / expert-ff axes — must mirror models.moe._ep_mode
+    if cfg.n_experts:
+        from repro.models.moe import _ep_mode
+        import dataclasses as _dc
+        ep_mode = _ep_mode(cfg, _dc.replace(rules, mesh=mesh))
+        if ep_mode == "alltoall":
+            ex_ax, eff_ax = rules.expert, rules.model
+        else:
+            ex_ax, eff_ax = None, rules.ff_wide
+    else:
+        ex_ax, eff_ax = None, None
+
+    def spec_for(path, leaf):
+        name = _path_str(path)
+        shp = leaf.shape
+        last = name.rsplit("/", 1)[-1]
+
+        def build(base_ndim, entries):
+            lead = len(shp) - base_ndim
+            return P(*([None] * lead + list(entries)))
+
+        if last in ("embed", "lm_head"):
+            return P(_axis_if(shp[0], mdl, ms), None)
+        # weights that cannot shard over the model axis fall back to
+        # ZeRO-3-style sharding of the d_model dim over 'data' (gathered on
+        # use — a few MB per layer — instead of replicated residency).
+        zero_ax = rules.batch[-1] if rules.batch else None
+        if "attn" in name:
+            if last == "wq":
+                ax = _axis_if(shp[-2], mdl, ms) if mode == "sharded" else None
+                d_ax = None if ax else _axis_if(shp[-3], zero_ax, ms)
+                return build(3, [d_ax, ax, None])
+            if last in ("wk", "wv"):
+                ax = _axis_if(shp[-2], mdl, ms) if mode == "sharded" else None
+                d_ax = None if ax else _axis_if(shp[-3], zero_ax, ms)
+                return build(3, [d_ax, ax, None])
+            if last == "wo":
+                ax = _axis_if(shp[-3], mdl, ms) if mode == "sharded" else None
+                d_ax = None if ax else _axis_if(shp[-1], zero_ax, ms)
+                return build(3, [ax, None, d_ax])
+        if "ffn" in name and cfg.n_experts:
+            if last in ("wi", "wg"):
+                return build(3, [_axis_if(shp[-3], ex_ax, ms), None,
+                                 _axis_if(shp[-1], eff_ax, ms)])
+            if last == "wo":
+                return build(3, [_axis_if(shp[-3], ex_ax, ms),
+                                 _axis_if(shp[-2], eff_ax, ms), None])
+            if last == "router":
+                return build(2, [_axis_if(shp[-2], zero_ax, ms), None])
+        if "ffn" in name:
+            if last in ("wi", "wg"):
+                return build(2, [None, _axis_if(shp[-1], mdl, ms)])
+            if last == "wo":
+                return build(2, [_axis_if(shp[-2], mdl, ms), None])
+        if "ssm" in name:
+            if last in ("z_proj", "x_proj", "dt_proj"):
+                return build(2, [None, _axis_if(shp[-1], mdl, ms)])
+            if last == "conv_x_w":
+                return build(2, [None, _axis_if(shp[-1], mdl, ms)])
+            if last == "out_proj":
+                return build(2, [_axis_if(shp[-2], mdl, ms), None])
+        return P(*([None] * len(shp)))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(shapes)
+    return jax.tree_util.tree_unflatten(
+        treedef, [spec_for(p, l) for p, l in flat])
+
+
+def opt_state_specs(cfg, rules, mesh, optimizer_name: str):
+    """Optimizer-state specs: param specs + ZeRO-1.
+
+    Adam moments additionally shard their largest still-unsharded dim over
+    the data axis (ZeRO-1): GSPMD turns the update into reduce-scatter(g) ->
+    sharded moment update -> all-gather(delta), so f32 moments never cost
+    more than params_bytes/|data| per device.
+    """
+    pspecs = param_specs(cfg, rules, mesh)
+    shapes = jax.eval_shape(
+        lambda k: transformer.init_params(k, cfg), jax.random.PRNGKey(0))
+    ms = dict(mesh.shape) if rules is not None else {}
+    zero_ax = rules.batch[-1] if (rules and rules.batch) else None
+
+    def zero1(spec, leaf):
+        if rules is None or zero_ax is None:
+            return spec
+        entries = list(spec) + [None] * (len(leaf.shape) - len(spec))
+        used = set()
+        for e in entries:
+            for a in (e if isinstance(e, tuple) else (e,)):
+                if a:
+                    used.add(a)
+        if zero_ax in used:
+            return spec
+        order = sorted(range(len(entries)),
+                       key=lambda i: -leaf.shape[i])
+        for i in order:
+            if entries[i] is None and leaf.shape[i] % ms[zero_ax] == 0 \
+                    and leaf.shape[i] >= ms[zero_ax]:
+                entries[i] = zero_ax
+                return P(*entries)
+        return spec
+
+    z1specs = jax.tree.map(zero1, pspecs, shapes,
+                           is_leaf=lambda x: isinstance(x, P))
+    if optimizer_name == "adamw":
+        return {"m": z1specs, "v": z1specs}
+
+    # adafactor: vr drops the last dim's entry, vc the second-to-last's
+    def factored(spec):
+        entries = list(spec)
+        if len(entries) >= 2:
+            return {"vr": P(*entries[:-1]),
+                    "vc": P(*entries[:-2] + entries[-1:])}
+        return {"v": P(*entries)}
+
+    return jax.tree.map(factored, pspecs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def train_state_specs(cfg, rules, mesh, optimizer_name: str) -> TrainState:
+    return TrainState(
+        params=param_specs(cfg, rules, mesh),
+        opt_state=opt_state_specs(cfg, rules, mesh, optimizer_name),
+        step=P(),
+    )
+
+
+def batch_specs(cfg, rules, mesh, batch_dict):
+    """Input batch specs: batch dim over the data axes when divisible."""
+    if rules is None:
+        return jax.tree.map(lambda _: P(), batch_dict)
+    ms = dict(mesh.shape)
+
+    def one(leaf):
+        ax = _axis_if(leaf.shape[0], rules.batch, ms)
+        return P(*([ax] + [None] * (len(leaf.shape) - 1)))
+
+    return jax.tree.map(one, batch_dict)
+
+
+def cache_specs(cfg, rules, mesh, caches):
+    """Decode-cache specs: batch over data axes, heads over model."""
+    if rules is None:
+        return jax.tree.map(lambda _: P(), caches)
+    ms = dict(mesh.shape)
+    mode, _ = head_sharding(cfg, rules)
+
+    def one(leaf):
+        shp = leaf.shape
+        if len(shp) == 5:   # kv cache (L, B, S_max, KV_true, hd)
+            # context-parallel decode: cache sharded on the SEQUENCE dim —
+            # works for any kv head count and never pays a repeat factor.
+            seq_ax = _axis_if(shp[2], rules.model, ms)
+            return P(None, _axis_if(shp[1], rules.batch, ms), seq_ax,
+                     None, None)
+        if len(shp) == 4:   # ssm conv (L, B, K-1, C)
+            return P(None, _axis_if(shp[1], rules.batch, ms), None, None)
+        return P(*([None] * len(shp)))
+
+    def route(leaf):
+        shp = leaf.shape
+        if len(shp) == 5 and shp[-1] == cfg.ssm_state and cfg.ssm_state:
+            # ssm state (L, B, NH, HD, N)
+            return P(None, _axis_if(shp[1], rules.batch, ms),
+                     _axis_if(shp[2], rules.model, ms), None, None)
+        return one(leaf)
+
+    return jax.tree.map(route, caches)

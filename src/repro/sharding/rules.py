@@ -1,0 +1,81 @@
+"""Logical -> mesh sharding rules (DP / TP / SP / EP / pod).
+
+One `MeshRules` instance fixes how every logical tensor axis maps onto mesh
+axes. The production meshes (launch.mesh) are:
+
+  single-pod: (data=16, model=16)            RULES_2D
+  multi-pod:  (pod=2, data=16, model=16)     RULES_3D
+
+Logical axes:
+  batch    -> all data-parallel axes (pod + data)
+  model    -> tensor-parallel axis (heads / d_ff / vocab shards)
+  expert   -> axes carrying the MoE expert dim (kimi: data; grok: none)
+  ff_wide  -> extra axes for very wide expert d_ff (grok: data+model)
+  seq      -> sequence-parallel axis for saved residuals (Megatron SP)
+
+`maybe_shard` is a no-op when rules is None (smoke tests on 1 CPU device)."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshRules:
+    tp: int                                  # size of the model axis
+    batch: tuple[str, ...] = ("data",)
+    model: str | None = "model"
+    expert: tuple[str, ...] = ("data",)      # EP all-to-all dispatch axis
+    ff_wide: tuple[str, ...] = ("data", "model")
+    seq: str | None = "model"
+    mesh: object = None                      # concrete Mesh for shard_map EP
+
+    def batch_spec(self) -> tuple:
+        return self.batch if self.batch else None
+
+
+RULES_1D = None  # single-device smoke tests: no constraints
+
+RULES_2D = MeshRules(tp=16, batch=("data",))
+
+# experts dispatch across pods too (a2a over pod x data = 32-way): halves the
+# per-device expert residency vs pod-replicated experts; grads for expert
+# weights then never cross pods at all (fully sharded).
+RULES_3D = MeshRules(tp=16, batch=("pod", "data"),
+                     expert=("pod", "data"),
+                     ff_wide=("pod", "data", "model"))
+
+
+def maybe_shard(x, spec_entries, rules: MeshRules | None):
+    """with_sharding_constraint if rules are active, identity otherwise.
+
+    spec_entries: tuple of logical entries, each None | str | tuple resolved
+    already to mesh-axis names (callers use rules.* fields).
+    """
+    if rules is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, P(*spec_entries))
+
+
+def head_sharding(cfg, rules: MeshRules | None):
+    """Resolve the attention head-sharding mode for this (arch, mesh).
+
+    Returns (mode, kv_repeat):
+      mode "sharded":   n_heads % tp == 0 — heads over the model axis; KV
+                        heads repeated by kv_repeat so they divide tp too.
+      mode "replicated": heads indivisible (paligemma/gemma 8H, llama 24H) —
+                        attention weights replicated over model axis.
+    """
+    if rules is None or cfg.n_heads == 0:
+        return "replicated", 1
+    tp = rules.tp
+    if cfg.n_heads % tp == 0:
+        group = cfg.n_heads // cfg.n_kv_heads
+        r = 1
+        while (cfg.n_kv_heads * r) % tp != 0 and r < group:
+            r *= 2
+        if (cfg.n_kv_heads * r) % tp == 0 and group % r == 0:
+            return "sharded", r
+    return "replicated", 1

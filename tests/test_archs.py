@@ -1,0 +1,135 @@
+"""Per-architecture smoke tests: reduced same-family configs, one
+forward/train step on CPU, shape + no-NaN assertions, decode consistency."""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, reduced_config, shapes_for
+from repro.data import SyntheticLMData
+from repro.models import lm, transformer
+from repro.runtime import serve, train
+from repro.optim import get_optimizer
+
+
+def _setup(arch, **over):
+    cfg = reduced_config(get_config(arch), **over)
+    if cfg.n_experts:  # disable capacity drops for determinism checks
+        cfg = dataclasses.replace(cfg, capacity_factor=float(cfg.n_experts))
+    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _batch(cfg, b=2, s=32, seed=0):
+    key = jax.random.PRNGKey(seed)
+    tok = jax.random.randint(key, (b, s - cfg.prefix_len), 0, cfg.vocab_size)
+    batch = {"tokens": tok}
+    if cfg.prefix_len:
+        batch["prefix_embed"] = jax.random.normal(
+            key, (b, cfg.prefix_len, cfg.d_model), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_and_loss(arch):
+    cfg, params = _setup(arch)
+    batch = _batch(cfg)
+    hidden, caches, aux = transformer.forward(
+        params, cfg, batch["tokens"], prefix_embed=batch.get("prefix_embed"))
+    b = batch["tokens"].shape[0]
+    s_total = batch["tokens"].shape[1] + cfg.prefix_len
+    assert hidden.shape == (b, s_total, cfg.d_model)
+    assert not bool(jnp.any(jnp.isnan(hidden)))
+    loss, metrics = lm.lm_loss(params, cfg, batch)
+    assert np.isfinite(float(loss))
+    # sane magnitude for a fresh model: ~ln(vocab)
+    assert float(loss) < np.log(cfg.padded_vocab) + 2.0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_one_train_step(arch):
+    cfg, params = _setup(arch)
+    step_fn = jax.jit(train.make_train_step(cfg))
+    state = train.init_train_state(params, get_optimizer(cfg))
+    batch = _batch(cfg)
+    new_state, metrics = step_fn(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert int(new_state.step) == 1
+    # params actually moved
+    delta = jax.tree.map(lambda a, b_: float(jnp.max(jnp.abs(
+        a.astype(jnp.float32) - b_.astype(jnp.float32)))),
+        state.params, new_state.params)
+    assert max(jax.tree.leaves(delta)) > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_matches_forward(arch):
+    cfg, params = _setup(arch)
+    s = 24
+    batch = _batch(cfg, s=s)
+    tok = batch["tokens"]
+    hidden, _, _ = transformer.forward(
+        params, cfg, tok, prefix_embed=batch.get("prefix_embed"))
+    full = transformer.logits_from_hidden(params, cfg, hidden[:, -1:, :])
+    pre = {"tokens": tok[:, :-1]}
+    if cfg.prefix_len:
+        pre["prefix_embed"] = batch["prefix_embed"]
+    _, caches = lm.prefill(params, cfg, pre)
+    caches = lm.extend_caches(cfg, caches, s + 4)
+    got, _ = lm.decode_step(params, cfg, tok[:, -1:], caches, jnp.int32(s - 1))
+    rel = float(jnp.max(jnp.abs(full - got))) / (
+        float(jnp.max(jnp.abs(full))) + 1e-9)
+    assert rel < 2e-3, rel
+
+
+def test_generate_runs_and_is_deterministic():
+    cfg, params = _setup("llama3.2-3b")
+    batch = _batch(cfg, s=16)
+    out1 = serve.generate(params, cfg, batch, n_tokens=5, s_max=32)
+    out2 = serve.generate(params, cfg, batch, n_tokens=5, s_max=32)
+    assert out1.shape == (2, 5)
+    np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
+    assert int(out1.max()) < cfg.vocab_size
+
+
+def test_train_loss_decreases_on_fixed_batch():
+    cfg, params = _setup("gemma-2b")
+    step_fn = jax.jit(train.make_train_step(cfg))
+    state = train.init_train_state(params, get_optimizer(cfg))
+    data = SyntheticLMData(cfg.vocab_size, 64, 4, seed=1)
+    batch = {k: jnp.asarray(v) for k, v in data.batch(0).items()}
+    first = None
+    for _ in range(10):
+        state, metrics = step_fn(state, batch)
+        first = first if first is not None else float(metrics["loss"])
+    assert float(metrics["loss"]) < first - 0.5, (first, float(metrics["loss"]))
+
+
+def test_grad_accum_matches_single_batch():
+    """grad_accum=2 must equal the full-batch gradient step (linear loss)."""
+    cfg1, params = _setup("minitron-8b")
+    cfg2 = dataclasses.replace(cfg1, grad_accum=2)
+    batch = _batch(cfg1, b=4, s=32)
+    s1 = train.init_train_state(params, get_optimizer(cfg1))
+    s2 = train.init_train_state(params, get_optimizer(cfg2))
+    n1, m1 = jax.jit(train.make_train_step(cfg1))(s1, batch)
+    n2, m2 = jax.jit(train.make_train_step(cfg2))(s2, batch)
+    # losses match closely; params match to optimizer-noise tolerance
+    assert abs(float(m1["loss"]) - float(m2["loss"])) < 2e-3
+    diff = jax.tree.map(lambda a, b_: float(jnp.max(jnp.abs(
+        a.astype(jnp.float32) - b_.astype(jnp.float32)))),
+        n1.params, n2.params)
+    assert max(jax.tree.leaves(diff)) < 5e-3
+
+
+@pytest.mark.parametrize("arch", ["mamba2-1.3b", "zamba2-7b"])
+def test_subquadratic_archs_run_long_shape(arch):
+    assert "long_500k" in shapes_for(get_config(arch))
+
+
+@pytest.mark.parametrize("arch", [a for a in ARCH_IDS
+                                  if a not in ("mamba2-1.3b", "zamba2-7b")])
+def test_full_attention_archs_skip_long_shape(arch):
+    assert "long_500k" not in shapes_for(get_config(arch))

@@ -1,0 +1,100 @@
+"""NSGA-II: domination/sort/crowding correctness + end-to-end convergence."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import nsga2
+
+
+def brute_force_ranks(objs: np.ndarray) -> np.ndarray:
+    n = objs.shape[0]
+    dom = np.zeros((n, n), dtype=bool)
+    for i in range(n):
+        for j in range(n):
+            dom[i, j] = np.all(objs[i] <= objs[j]) and np.any(objs[i] < objs[j])
+    rank = np.full(n, -1)
+    r = 0
+    remaining = set(range(n))
+    while remaining:
+        front = [j for j in remaining if not any(dom[i, j] for i in remaining)]
+        for j in front:
+            rank[j] = r
+        remaining -= set(front)
+        r += 1
+    return rank
+
+
+@settings(deadline=None, max_examples=25)
+@given(
+    st.integers(0, 2**31 - 1),
+    st.integers(2, 40),
+    st.integers(1, 3),
+)
+def test_nd_sort_matches_bruteforce(seed, n, m):
+    rng = np.random.default_rng(seed)
+    # duplicates included on purpose
+    objs = rng.integers(0, 4, size=(n, m)).astype(np.float32)
+    got = np.asarray(nsga2.non_dominated_sort(jnp.asarray(objs)))
+    want = brute_force_ranks(objs)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_domination_matrix_basics():
+    objs = jnp.array([[0.0, 0.0], [1.0, 1.0], [0.0, 1.0], [0.0, 0.0]])
+    d = np.asarray(nsga2.domination_matrix(objs))
+    assert d[0, 1] and d[0, 2] and not d[1, 0]
+    assert not d[0, 3] and not d[3, 0]  # equal points don't dominate
+    assert not d.diagonal().any()
+
+
+def test_crowding_extremes_are_infinite():
+    objs = jnp.array([[0.0, 3.0], [1.0, 2.0], [2.0, 1.0], [3.0, 0.0]])
+    rank = jnp.zeros(4, jnp.int32)
+    c = np.asarray(nsga2.crowding_distance(objs, rank))
+    assert c[0] > 1e8 and c[3] > 1e8
+    assert c[1] < 1e8 and c[2] < 1e8
+    assert np.isclose(c[1], c[2])
+
+
+def test_operators_stay_in_bounds():
+    key = jax.random.PRNGKey(0)
+    a = jax.random.uniform(key, (32, 10))
+    b = jax.random.uniform(jax.random.PRNGKey(1), (32, 10))
+    o1, o2 = nsga2._sbx(key, a, b, 20.0, 0.9)
+    assert float(o1.min()) >= 0 and float(o1.max()) <= 1
+    m = nsga2._poly_mutation(key, a, 20.0, 0.5)
+    assert float(m.min()) >= 0 and float(m.max()) <= 1
+
+
+def test_nsga2_converges_on_zdt1_like():
+    """Front should approach the analytic pareto set of a ZDT1-style problem."""
+    def fitness(pop):
+        f1 = pop[:, 0]
+        g = 1.0 + 9.0 * pop[:, 1:].mean(axis=1)
+        f2 = g * (1.0 - jnp.sqrt(f1 / g))
+        return jnp.stack([f1, f2], axis=1)
+
+    cfg = nsga2.NSGA2Config(pop_size=48, n_generations=60)
+    state = nsga2.run(jax.random.PRNGKey(0), jax.jit(fitness), 6, cfg)
+    objs, _ = nsga2.pareto_front(state.objs, state.genes)
+    # analytic front: f2 = 1 - sqrt(f1); mean gap should be small
+    gap = np.mean(np.abs(objs[:, 1] - (1.0 - np.sqrt(objs[:, 0]))))
+    assert gap < 0.25, gap
+    assert len(objs) > 5
+
+
+def test_elitism_never_regresses_best_objective():
+    def fitness(pop):
+        return jnp.stack([pop[:, 0], 1.0 - pop[:, 0]], axis=1)
+
+    cfg = nsga2.NSGA2Config(pop_size=16, n_generations=1)
+    key = jax.random.PRNGKey(2)
+    state = nsga2.init_state(key, jax.jit(fitness), 4, cfg)
+    step = jax.jit(nsga2.make_step(jax.jit(fitness), cfg))
+    best = float(state.objs[:, 0].min())
+    for _ in range(10):
+        state = step(state)
+        new_best = float(state.objs[:, 0].min())
+        assert new_best <= best + 1e-7
+        best = new_best

@@ -1,0 +1,101 @@
+"""Tree training + parallel comparator-array form: correctness & properties."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.datasets import load_dataset, quantize_u8
+from repro.core.train import train_tree, predict_numpy, TreeArrays
+from repro.core.tree import (
+    to_parallel, ptree_to_jnp, predict_quantized, predict_descent_quantized,
+)
+from repro.core import quant
+
+
+@pytest.fixture(scope="module")
+def seeds_setup():
+    ds = load_dataset("seeds")
+    tree = train_tree(ds.x_train, ds.y_train, ds.n_classes)
+    return ds, tree, to_parallel(tree)
+
+
+def test_tree_structure_invariants(seeds_setup):
+    _, tree, pt = seeds_setup
+    assert tree.n_comparators + tree.n_leaves == tree.n_nodes
+    assert pt.n_leaves == pt.n_comparators + 1  # binary tree
+    # every leaf path is consistent: path_len == nonzeros, n_neg <= path_len
+    assert (pt.path_len == (pt.path != 0).sum(1)).all()
+    assert (pt.n_neg <= pt.path_len).all()
+    # exactly one leaf satisfied for any decision vector
+    rng = np.random.default_rng(0)
+    for _ in range(16):
+        d = rng.integers(0, 2, pt.n_comparators)
+        score = d @ pt.path.T.astype(np.int64)
+        sat = score + pt.n_neg == pt.path_len
+        assert sat.sum() == 1
+
+
+def test_train_until_pure_high_train_accuracy(seeds_setup):
+    ds, tree, _ = seeds_setup
+    # leaves are expanded until pure modulo 8-bit grid collisions
+    acc = (predict_numpy(tree, ds.x_train) == ds.y_train).mean()
+    assert acc > 0.93
+
+
+def test_parallel_equals_descent_float(seeds_setup):
+    ds, tree, pt = seeds_setup
+    pj = ptree_to_jnp(pt)
+    x8 = jnp.asarray(quantize_u8(ds.x_test).astype(np.int32))
+    bits = jnp.full(pt.n_comparators, 8, jnp.int32)
+    marg = jnp.zeros(pt.n_comparators, jnp.int32)
+    np.testing.assert_array_equal(
+        np.asarray(predict_quantized(x8, pj, bits, marg)),
+        predict_numpy(tree, ds.x_test),
+    )
+
+
+@settings(deadline=None, max_examples=20)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_parallel_equals_descent_quantized(seeds_setup, seed):
+    """Property: the MXU path-matmul form == sequential descent for ANY
+    per-comparator (precision, margin) assignment."""
+    ds, tree, pt = seeds_setup
+    rng = np.random.default_rng(seed)
+    bits_n = rng.integers(2, 9, tree.n_nodes)
+    marg_n = rng.integers(-5, 6, tree.n_nodes)
+    internal = np.flatnonzero(tree.feature >= 0)
+    x8 = quantize_u8(ds.x_test).astype(np.int32)
+    ref = predict_descent_quantized(x8, tree, bits_n, marg_n)
+    got = np.asarray(
+        predict_quantized(
+            jnp.asarray(x8), ptree_to_jnp(pt),
+            jnp.asarray(bits_n[internal].astype(np.int32)),
+            jnp.asarray(marg_n[internal].astype(np.int32)),
+        )
+    )
+    np.testing.assert_array_equal(got, ref)
+
+
+def test_quant_exact_8bit_reproduces_training_split():
+    """At p=8, m=0 the quantized comparator is bit-identical to training."""
+    ds = load_dataset("balance")
+    tree = train_tree(ds.x_train, ds.y_train, ds.n_classes)
+    pt = to_parallel(tree)
+    x8 = jnp.asarray(quantize_u8(ds.x_train).astype(np.int32))
+    bits = jnp.full(pt.n_comparators, 8, jnp.int32)
+    marg = jnp.zeros(pt.n_comparators, jnp.int32)
+    np.testing.assert_array_equal(
+        np.asarray(predict_quantized(x8, ptree_to_jnp(pt), bits, marg)),
+        predict_numpy(tree, ds.x_train),
+    )
+
+
+def test_decode_genes_ranges():
+    g = np.linspace(0, 1, 101)[None, :].repeat(2, 0).T.reshape(-1)  # (2*101,)... sanity below
+    g = np.random.default_rng(1).uniform(0, 1, 2 * 257)
+    bits, marg = quant.decode_genes(jnp.asarray(g))
+    assert int(bits.min()) >= 2 and int(bits.max()) <= 8
+    assert int(marg.min()) >= -5 and int(marg.max()) <= 5
+    # exact genes decode to (8, 0)
+    eb, em = quant.decode_genes(jnp.asarray(quant.exact_genes(5)))
+    assert (np.asarray(eb) == 8).all() and (np.asarray(em) == 0).all()

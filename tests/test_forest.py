@@ -1,0 +1,46 @@
+"""Random-Forest extension: voting, joint approximation, cross-tree CSE."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.datasets import load_dataset, quantize_u8
+from repro.core import forest as F, nsga2, quant
+
+
+def _setup():
+    ds = load_dataset("seeds")
+    fr = F.train_forest(ds.x_train, ds.y_train, ds.n_classes, n_trees=3)
+    return ds, fr
+
+
+def test_forest_beats_or_matches_single_tree_accuracy():
+    ds, fr = _setup()
+    x8 = jnp.asarray(quantize_u8(ds.x_test).astype(np.int32))
+    bits = jnp.full((fr.n_comparators,), 8, jnp.int32)
+    marg = jnp.zeros((fr.n_comparators,), jnp.int32)
+    pred = F.forest_predict(fr, x8, bits, marg)
+    acc = float(jnp.mean((pred == jnp.asarray(ds.y_test)).astype(jnp.float32)))
+    assert acc > 0.75  # sanity: voting works
+
+
+def test_cross_tree_cse_saves_area():
+    """Snapping all trees to 2-bit grids forces shared comparators: the
+    dedup'd forest area must undercut the additive sum."""
+    _, fr = _setup()
+    bits = np.full(fr.n_comparators, 2)
+    marg = np.zeros(fr.n_comparators, dtype=int)
+    dedup = F.forest_area_mm2(fr, bits, marg, dedup=True)
+    additive = F.forest_area_mm2(fr, bits, marg, dedup=False)
+    assert dedup < additive
+
+
+def test_forest_nsga2_finds_reductions():
+    ds, fr = _setup()
+    fit, exact_acc, exact_area = F.make_forest_fitness(fr, ds.x_test, ds.y_test)
+    cfg = nsga2.NSGA2Config(pop_size=24, n_generations=10)
+    state = nsga2.run(jax.random.PRNGKey(0), fit, fr.n_genes, cfg,
+                      seed_genes=quant.exact_genes(fr.n_comparators))
+    objs, _ = nsga2.pareto_front(state.objs, state.genes)
+    ok = objs[objs[:, 0] <= 0.01 + 1e-9]
+    assert len(ok) > 0
+    assert ok[:, 1].min() < 0.9  # >1.1x area reduction at <=1% loss

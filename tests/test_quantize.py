@@ -1,0 +1,87 @@
+"""LM mixed-precision bespoke quantization (the paper's technique carried to
+the model zoo) + qmatmul integration."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.quantize import bespoke
+from repro.kernels import ops as kops
+
+
+@given(bits=st.integers(2, 8), margin=st.integers(0, 5))
+def test_snap_lut_properties(bits, margin):
+    lut = bespoke.snap_lut(bits, margin)
+    lo, hi = -(1 << (bits - 1)), (1 << (bits - 1)) - 1
+    codes = np.arange(lo, hi + 1)
+    snapped = lut[codes - lo]
+    # within margin, in range, and never more expensive (popcount)
+    assert (np.abs(snapped - codes) <= margin).all()
+    assert snapped.min() >= lo and snapped.max() <= hi
+    pc = lambda v: np.array([bin(abs(int(c))).count("1") for c in v])
+    assert (pc(snapped) <= pc(codes)).all()
+    if margin == 0:
+        np.testing.assert_array_equal(snapped, codes)
+
+
+@settings(deadline=None, max_examples=10)
+@given(bits=st.integers(2, 8), seed=st.integers(0, 2**31 - 1))
+def test_quantize_tensor_error_bounded(bits, seed):
+    rng = np.random.default_rng(seed)
+    w = rng.normal(0, 0.05, (32, 16)).astype(np.float32)
+    codes, scale = bespoke.quantize_tensor(w, bits, margin=0)
+    back = bespoke.dequantize_tensor(codes, scale)
+    # max error ~ half a step per channel
+    step = scale[0]
+    assert (np.abs(back - w) <= step * 0.5 + 1e-7).all()
+
+
+def test_quantized_matmul_through_kernel():
+    """codes+scales from quantize_tensor run through kernels.qmatmul and
+    match the dequantized-dense product."""
+    rng = np.random.default_rng(0)
+    w = rng.normal(0, 0.05, (256, 128)).astype(np.float32)
+    x = rng.normal(size=(64, 256)).astype(np.float32)
+    codes, scale = bespoke.quantize_tensor(w, bits=8, margin=0)
+    got = kops.qmatmul(jnp.asarray(x), jnp.asarray(codes),
+                       jnp.asarray(scale[0]), interpret=True)
+    want = x @ bespoke.dequantize_tensor(codes, scale)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-4, atol=1e-4)
+
+
+def test_apply_chromosome_cost_monotone_in_bits():
+    from repro.configs import get_config, reduced_config
+    from repro.models import transformer
+    cfg = reduced_config(get_config("gemma-2b"), prefix_len=0)
+    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    n = len(bespoke.quantizable_tensors(params))
+    hi_bits = np.zeros(2 * n); hi_bits[0::2] = 0.99; hi_bits[1::2] = 0.0
+    lo_bits = np.zeros(2 * n); lo_bits[0::2] = 0.0; lo_bits[1::2] = 0.0
+    _, cost_hi = bespoke.apply_chromosome(params, hi_bits)
+    _, cost_lo = bespoke.apply_chromosome(params, lo_bits)
+    assert cost_lo < cost_hi
+    # 8-bit cost must be below the bf16 baseline (=1.0)
+    assert cost_hi < 1.0
+
+
+def test_quant_search_smoke():
+    """Tiny end-to-end search: pareto must trade loss against cost."""
+    from repro.configs import get_config, reduced_config
+    from repro.core import nsga2
+    from repro.models import lm, transformer
+    cfg = reduced_config(get_config("llama3.2-3b"), n_layers=1, d_model=32,
+                         d_ff=64, vocab_size=128, loss_chunk=256)
+    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (4, 32),
+                                          0, cfg.vocab_size)}
+    loss_fn = jax.jit(lambda p, b: lm.lm_loss(p, cfg, b)[0])
+    fitness, n_genes, base = bespoke.make_lm_quant_problem(
+        params, cfg, batch, loss_fn)
+    ga = nsga2.NSGA2Config(pop_size=8, n_generations=3)
+    state = nsga2.run(jax.random.PRNGKey(2),
+                      lambda g: jnp.asarray(fitness(np.asarray(g))),
+                      n_genes, ga, jit=False)
+    objs, _ = nsga2.pareto_front(state.objs, state.genes)
+    assert len(objs) >= 1
+    assert (objs[:, 1] < 1.0).all()  # all cheaper than bf16

@@ -1,0 +1,77 @@
+"""End-to-end behaviour of the paper's system: train -> approximate -> pareto.
+
+This is the paper's headline claim in miniature: NSGA-II over the dual
+comparator approximation yields designs with large area reduction at small
+(or negative) accuracy loss, all dominating or matching the exact bespoke
+design (paper Fig. 5, Tables I/II).
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.datasets import load_dataset
+from repro.core.train import train_tree
+from repro.core.tree import to_parallel
+from repro.core import approx, area, nsga2, quant, rtl
+
+
+@pytest.fixture(scope="module")
+def searched():
+    ds = load_dataset("vertebral")
+    tree = train_tree(ds.x_train, ds.y_train, ds.n_classes)
+    pt = to_parallel(tree)
+    prob = approx.build_problem(pt, ds.x_test, ds.y_test)
+    fit = approx.make_fitness_fn(prob)
+    cfg = nsga2.NSGA2Config(pop_size=48, n_generations=30)
+    state = nsga2.run(jax.random.PRNGKey(0), fit, prob.n_genes, cfg)
+    return ds, tree, pt, prob, state
+
+
+def test_exact_design_objectives(searched):
+    _, _, pt, prob, _ = searched
+    fit = approx.make_fitness_fn(prob)
+    o = np.asarray(fit(jnp.asarray(quant.exact_genes(pt.n_comparators))[None]))[0]
+    assert abs(o[0]) < 1e-6      # zero accuracy loss vs itself
+    assert abs(o[1] - 1.0) < 1e-6  # unit normalized area
+
+
+def test_pareto_dominates_exact(searched):
+    """Paper: every derived solution has lower area than the exact design."""
+    _, _, _, _, state = searched
+    objs, _ = nsga2.pareto_front(state.objs, state.genes)
+    assert (objs[:, 1] < 1.0).all()
+
+
+def test_area_reduction_at_paper_thresholds(searched):
+    """Paper Table II: >= 1.5x area reduction at the 1% loss threshold."""
+    _, _, _, _, state = searched
+    objs, _ = nsga2.pareto_front(state.objs, state.genes)
+    ok1 = objs[objs[:, 0] <= 0.01 + 1e-6]
+    assert len(ok1) > 0
+    best_area = ok1[:, 1].min()
+    assert best_area < 1 / 1.5, f"area reduction only {1/best_area:.2f}x"
+
+
+def test_power_tracks_area(searched):
+    _, _, pt, prob, state = searched
+    objs, _ = nsga2.pareto_front(state.objs, state.genes)
+    a_mm2 = objs[:, 1] * prob.exact_area_mm2
+    p_mw = np.array([area.power_mw(a) for a in a_mm2])
+    np.testing.assert_allclose(p_mw / a_mm2, area.POWER_PER_MM2_MW)
+
+
+def test_rtl_emission(searched):
+    _, _, pt, prob, state = searched
+    objs, genes = nsga2.pareto_front(state.objs, state.genes)
+    bits, marg = quant.decode_genes(jnp.asarray(genes[0]))
+    t_int = quant.substitute(quant.threshold_to_int(jnp.asarray(pt.threshold), bits), marg, bits)
+    v = rtl.emit_verilog(pt, np.asarray(bits), np.asarray(t_int))
+    assert v.count("wire d") == pt.n_comparators
+    assert v.count("wire leaf") == pt.n_leaves
+    assert "module bespoke_dtree" in v and "endmodule" in v
+    # exact design at full precision contains 8-bit slices
+    eb = np.full(pt.n_comparators, 8)
+    t8 = np.clip(np.floor(pt.threshold * 256).astype(int), 0, 255)
+    v8 = rtl.emit_verilog(pt, eb, t8)
+    assert "[7:0] >" in v8

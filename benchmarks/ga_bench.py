@@ -1,20 +1,38 @@
 """GA throughput benchmark (paper §IV: slowest single-chromosome fitness
 3.08 ms on HAR). Ours is population-vectorized: we report amortized
-us-per-chromosome-evaluation for the reference (vmap) and Pallas-kernel
-fitness paths, plus one full NSGA-II generation."""
+us-per-chromosome-evaluation for the unified search engine's `reference`
+(vmap) and `kernel` (fused Pallas) backends, plus one full NSGA-II
+generation.
+
+`ga.forest_*` rows compare the OLD K-iteration per-tree Python loop
+(`core.forest.forest_predict`, one small program per tree) against the fused
+block-diagonal super-tree evaluation (`repro.search`): reference backend =
+one vote-matmul tensor program, kernel backend = ONE Pallas launch for the
+entire population x test-set x forest product. Results are also emitted as a
+BENCH_search.json artifact (see `write_artifact` / benchmarks.run).
+"""
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
 import jax.numpy as jnp
 
 from benchmarks.paper_tables import build_all
-from repro.core import approx, nsga2
+from repro.core import forest as forest_mod
+from repro.core import nsga2, quant
+from repro.datasets import load_dataset
+from repro import search
+
+ARTIFACT = os.path.join(os.path.dirname(os.path.dirname(__file__)),
+                        "BENCH_search.json")
 
 
 def _timeit(fn, *args, repeat=5):
-    fn(*args)  # compile
+    out = fn(*args)  # compile
+    jax.block_until_ready(out)
     t0 = time.perf_counter()
     for _ in range(repeat):
         out = fn(*args)
@@ -22,14 +40,43 @@ def _timeit(fn, *args, repeat=5):
     return (time.perf_counter() - t0) / repeat
 
 
+def _looped_forest_fitness(forest, problem):
+    """The historical forest fitness: a Python loop of K per-tree programs
+    (gather + small matmul each), kept here as the benchmark baseline the
+    fused engine is measured against."""
+    x8 = problem.x8
+    y = problem.y
+    thresholds = jnp.concatenate(
+        [jnp.asarray(p.threshold) for p in forest.ptrees])
+    exact_acc = problem.exact_accuracy
+    exact_area = problem.exact_area_mm2
+    lut, offsets = problem.area_lut, problem.lut_offsets
+    overhead = problem.overhead_mm2
+
+    @jax.jit
+    def fitness(pop):
+        def one(genes):
+            bits, marg = quant.decode_genes(genes)
+            pred = forest_mod.forest_predict(forest, x8, bits, marg)
+            acc = jnp.mean((pred == y).astype(jnp.float32))
+            t_int = quant.substitute(
+                quant.threshold_to_int(thresholds, bits), marg, bits)
+            a = lut[offsets[bits] + t_int].sum() + overhead
+            return jnp.stack([exact_acc - acc, a / exact_area])
+        return jax.vmap(one)(pop)
+
+    return fitness
+
+
 def run(datasets=("har", "pendigits", "seeds"), pop=64):
+    """Single-tree rows: reference vs kernel backend + one GA generation."""
     rows = []
     built = build_all(datasets)
     for name, (ds, tree, pt, prob) in built.items():
         genes = jax.random.uniform(jax.random.PRNGKey(0), (pop, prob.n_genes))
-        f_ref = approx.make_fitness_fn(prob)
+        f_ref = search.make_fitness(prob, "reference")
         t_ref = _timeit(f_ref, genes)
-        f_ker = approx.make_fitness_fn_kernel(prob, pt, ds.n_features)
+        f_ker = search.make_fitness(prob, "kernel")
         t_ker = _timeit(f_ker, genes)
         step = jax.jit(nsga2.make_step(
             f_ref, nsga2.NSGA2Config(pop_size=pop, n_generations=1)))
@@ -45,3 +92,70 @@ def run(datasets=("har", "pendigits", "seeds"), pop=64):
             "paper_ms_per_chromosome_har": 3.08,
         })
     return rows
+
+
+def run_forest(datasets=("seeds", "vertebral"), n_trees=4, pop=64):
+    """Forest rows: looped per-tree baseline vs fused engine backends.
+
+    The fused rows evaluate the whole >=``n_trees``-tree forest population
+    with NO per-tree Python loop — `kernel` is one Pallas program (grid =
+    population x batch-blocks x leaf-blocks)."""
+    rows = []
+    for name in datasets:
+        ds = load_dataset(name)
+        forest = forest_mod.train_forest(ds.x_train, ds.y_train, ds.n_classes,
+                                         n_trees=n_trees)
+        prob = search.build_forest_problem(forest, ds.x_test, ds.y_test)
+        genes = jax.random.uniform(jax.random.PRNGKey(0), (pop, prob.n_genes))
+        f_loop = _looped_forest_fitness(forest, prob)
+        f_ref = search.make_fitness(prob, "reference")
+        f_ker = search.make_fitness(prob, "kernel")
+        t_loop = _timeit(f_loop, genes)
+        t_ref = _timeit(f_ref, genes)
+        t_ker = _timeit(f_ker, genes)
+        rows.append({
+            "dataset": name,
+            "n_trees": n_trees,
+            "n_comparators": prob.n_comparators,
+            "us_per_chromosome_looped": 1e6 * t_loop / pop,
+            "us_per_chromosome_fused_ref": 1e6 * t_ref / pop,
+            "us_per_chromosome_fused_kernel": 1e6 * t_ker / pop,
+            "fused_ref_speedup_vs_looped": t_loop / t_ref,
+        })
+    return rows
+
+
+def write_artifact(tree_rows, forest_rows, path=ARTIFACT) -> str:
+    """Emit BENCH_search.json: the search-engine throughput artifact."""
+    payload = {
+        "backend": jax.default_backend(),
+        "single_tree": tree_rows,
+        "forest": forest_rows,
+    }
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(payload, f, indent=1)
+    os.replace(tmp, path)
+    return path
+
+
+def main(quick=False):
+    tree_rows = run(datasets=("seeds",) if quick else ("har", "pendigits", "seeds"),
+                    pop=32 if quick else 64)
+    forest_rows = run_forest(datasets=("seeds",) if quick else ("seeds", "vertebral"),
+                             pop=32 if quick else 64)
+    path = write_artifact(tree_rows, forest_rows)
+    for r in tree_rows:
+        print(f"ga.{r['dataset']}: ref={r['us_per_chromosome_ref']:.1f}us "
+              f"kernel={r['us_per_chromosome_kernel']:.1f}us /chromosome")
+    for r in forest_rows:
+        print(f"ga.forest_{r['dataset']}: looped={r['us_per_chromosome_looped']:.1f}us "
+              f"fused_ref={r['us_per_chromosome_fused_ref']:.1f}us "
+              f"fused_kernel={r['us_per_chromosome_fused_kernel']:.1f}us /chromosome "
+              f"(fused_ref {r['fused_ref_speedup_vs_looped']:.2f}x vs looped)")
+    print(f"artifact: {path}")
+
+
+if __name__ == "__main__":
+    import sys
+    main(quick="--quick" in sys.argv)

@@ -99,15 +99,12 @@ def table1(built=None, force=False) -> dict:
 
 def run_search(name, pt, prob, pop=64, gens=40, seed=0, use_kernel=False,
                n_features=None):
-    if use_kernel:
-        fit = approx.make_fitness_fn_kernel(prob, pt, n_features)
-    else:
-        fit = approx.make_fitness_fn(prob)
-    cfg = nsga2.NSGA2Config(pop_size=pop, n_generations=gens)
-    state = nsga2.run(jax.random.PRNGKey(seed), fit, prob.n_genes, cfg,
-                      seed_genes=quant.exact_genes(pt.n_comparators))
-    objs, genes = nsga2.pareto_front(state.objs, state.genes)
-    return objs, genes
+    """One dataset's NSGA-II search through the unified engine."""
+    from repro import search
+    result = search.run_search(
+        prob, backend="kernel" if use_kernel else "reference",
+        pop_size=pop, n_generations=gens, seed=seed)
+    return result.pareto_objs, result.pareto_genes
 
 
 def actual_area_mm2(pt, genes) -> float:

@@ -60,11 +60,23 @@ def main() -> None:
          f";paper=3.2x/3.4x")
 
     # ---- GA throughput (paper §IV time-complexity claim) -----------------
-    for r in ga_bench.run():
+    ga_rows = ga_bench.run()
+    for r in ga_rows:
         _row(f"ga.{r['dataset']}", r["us_per_chromosome_ref"],
              f"kernel_us={r['us_per_chromosome_kernel']:.1f};"
              f"gen_us={r['us_per_generation']:.0f};"
              f"paper_har_ms=3.08")
+
+    # ---- forest GA: looped per-tree baseline vs fused search engine ------
+    forest_rows = ga_bench.run_forest(pop=pop)
+    for r in forest_rows:
+        _row(f"ga.forest_{r['dataset']}", r["us_per_chromosome_fused_ref"],
+             f"looped_us={r['us_per_chromosome_looped']:.1f};"
+             f"fused_kernel_us={r['us_per_chromosome_fused_kernel']:.1f};"
+             f"n_trees={r['n_trees']};"
+             f"fused_speedup={r['fused_ref_speedup_vs_looped']:.2f}x")
+    artifact = ga_bench.write_artifact(ga_rows, forest_rows)
+    _row("ga.artifact", 0.0, f"path={artifact}")
 
     # ---- kernel microbenches ---------------------------------------------
     for r in kernel_bench.run():

@@ -1,65 +1,82 @@
 """Quickstart: the paper's pipeline end-to-end on one dataset.
 
-Train an exact bespoke Decision Tree, run the NSGA-II dual-approximation
-search, print the pareto front, pick the best design under a 1% accuracy-loss
-budget, and emit its bespoke Verilog.
+Train an exact bespoke Decision Tree (or a random forest with --trees K),
+run the NSGA-II dual-approximation search through the unified engine
+(`repro.search.run_search`), print the pareto front, pick the best design
+under a 1% accuracy-loss budget, and emit its bespoke Verilog.
 
     PYTHONPATH=src python examples/quickstart.py [--dataset seeds]
+    PYTHONPATH=src python examples/quickstart.py --backend kernel --trees 4
+
+(The same flow is packaged as ``python -m repro.search``.)
 """
 import argparse
 
 import numpy as np
-import jax
 import jax.numpy as jnp
 
 from repro.datasets import load_dataset
 from repro.core.train import train_tree
 from repro.core.tree import to_parallel
-from repro.core import approx, area, nsga2, quant, rtl
+from repro.core.forest import train_forest
+from repro.core import area, quant, rtl
+from repro import search
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dataset", default="seeds")
+    ap.add_argument("--backend", default="reference",
+                    choices=list(search.BACKENDS))
+    ap.add_argument("--trees", type=int, default=1)
     ap.add_argument("--pop", type=int, default=64)
     ap.add_argument("--gens", type=int, default=40)
     args = ap.parse_args()
 
-    print(f"== {args.dataset}: train exact bespoke DT ==")
+    print(f"== {args.dataset}: train exact bespoke "
+          f"{'DT' if args.trees <= 1 else f'{args.trees}-tree RF'} ==")
     ds = load_dataset(args.dataset)
-    tree = train_tree(ds.x_train, ds.y_train, ds.n_classes)
-    pt = to_parallel(tree)
-    prob = approx.build_problem(pt, ds.x_test, ds.y_test)
-    print(f"comparators={pt.n_comparators} leaves={pt.n_leaves} "
+    pt = None
+    if args.trees <= 1:
+        tree = train_tree(ds.x_train, ds.y_train, ds.n_classes)
+        pt = to_parallel(tree)
+        prob = search.build_tree_problem(pt, ds.x_test, ds.y_test)
+    else:
+        forest = train_forest(ds.x_train, ds.y_train, ds.n_classes,
+                              n_trees=args.trees)
+        prob = search.build_forest_problem(forest, ds.x_test, ds.y_test)
+    print(f"comparators={prob.n_comparators} leaves={prob.n_leaves} "
           f"test_acc={prob.exact_accuracy:.3f} "
           f"area={prob.exact_area_mm2:.1f}mm^2 "
           f"power={area.power_mw(prob.exact_area_mm2):.2f}mW")
 
-    print(f"== NSGA-II search (pop={args.pop}, gens={args.gens}) ==")
-    fit = approx.make_fitness_fn(prob)
-    cfg = nsga2.NSGA2Config(pop_size=args.pop, n_generations=args.gens)
-    state = nsga2.run(jax.random.PRNGKey(0), fit, prob.n_genes, cfg)
-    objs, genes = nsga2.pareto_front(state.objs, state.genes)
+    print(f"== NSGA-II search (backend={args.backend}, pop={args.pop}, "
+          f"gens={args.gens}) ==")
+    result = search.run_search(prob, backend=args.backend, pop_size=args.pop,
+                               n_generations=args.gens)
 
     print("pareto front (acc_loss, normalized area):")
-    for o in objs:
+    for o in result.pareto_objs:
         print(f"  {o[0]:+.4f}  {o[1]:.3f}  ({1/max(o[1],1e-9):.2f}x smaller)")
 
-    ok = [(o, g) for o, g in zip(objs, genes) if o[0] <= 0.01]
-    o, g = min(ok, key=lambda t: t[0][1]) if ok else (objs[0], genes[0])
+    best = result.best_under_loss(0.01)
+    if best is None:
+        best = result.pareto_objs[0], result.pareto_genes[0]
+    o, g = best
     a_mm2 = o[1] * prob.exact_area_mm2
     print(f"\nselected @<=1% loss: area={a_mm2:.1f}mm^2 "
           f"({1/o[1]:.2f}x), power={area.power_mw(a_mm2):.2f}mW "
           f"{'< 3mW: printed-battery OK' if area.power_mw(a_mm2) < 3 else ''}")
 
-    bits, marg = quant.decode_genes(jnp.asarray(g))
-    t_int = quant.substitute(
-        quant.threshold_to_int(jnp.asarray(pt.threshold), bits), marg, bits)
-    verilog = rtl.emit_verilog(pt, np.asarray(bits), np.asarray(t_int))
-    out = f"/tmp/bespoke_{args.dataset}.v"
-    with open(out, "w") as f:
-        f.write(verilog)
-    print(f"bespoke RTL written to {out} ({len(verilog.splitlines())} lines)")
+    if pt is not None:
+        bits, marg = quant.decode_genes(jnp.asarray(g))
+        t_int = quant.substitute(
+            quant.threshold_to_int(jnp.asarray(pt.threshold), bits), marg, bits)
+        verilog = rtl.emit_verilog(pt, np.asarray(bits), np.asarray(t_int))
+        out = f"/tmp/bespoke_{args.dataset}.v"
+        with open(out, "w") as f:
+            f.write(verilog)
+        print(f"bespoke RTL written to {out} ({len(verilog.splitlines())} lines)")
 
 
 if __name__ == "__main__":

@@ -4,11 +4,27 @@
 - tree.py   flattened trees + parallel comparator-array form (TPU dataflow)
 - quant.py  precision-conversion module (paper Fig. 3b)
 - area.py   comparator gate model + Area LUT (paper Fig. 4) + power model
-- approx.py dual approximation chromosome -> (accuracy loss, area) fitness
+- approx.py dual approximation fitness (thin adapter over repro.search)
+- forest.py random-forest trainer + per-tree oracle + CSE area
 - nsga2.py  vectorized NSGA-II (paper §III-B)
 - dist.py   population sharding + island-model GA across pods
 - rtl.py    bespoke Verilog emission (paper §III synthesis front-end)
-"""
-from repro.core import approx, area, nsga2, quant, rtl, tree, train
 
-__all__ = ["approx", "area", "nsga2", "quant", "rtl", "tree", "train"]
+Design-space *search* (tree and forest alike) lives in `repro.search`:
+one SearchProblem + pluggable reference/kernel/islands backends behind
+`run_search` (DESIGN.md §7).
+"""
+from repro.core import area, nsga2, quant, rtl, tree, train
+
+__all__ = ["approx", "area", "forest", "nsga2", "quant", "rtl", "tree",
+           "train"]
+
+
+def __getattr__(name):
+    # approx/forest adapt over repro.search, which itself imports repro.core:
+    # loading them lazily (PEP 562) keeps `from repro.core import approx`
+    # working from either entry point without a circular import.
+    if name in ("approx", "forest"):
+        import importlib
+        return importlib.import_module(f"repro.core.{name}")
+    raise AttributeError(f"module 'repro.core' has no attribute {name!r}")

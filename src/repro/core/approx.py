@@ -2,164 +2,66 @@
 
 One chromosome holds 2N genes (paper Fig. 3a): per comparator a precision
 gene (decoded to p in [2,8]) and a margin gene (decoded to m in [-5,+5]).
-Fitness is evaluated fully vectorized: the entire population is one batched
-tensor program (vmap over chromosomes), which is this framework's TPU-native
-replacement for the paper's thread-per-chromosome evaluation.
+
+This module is now a thin single-tree adapter over the unified search engine
+in `repro.search` (DESIGN.md §7): `ApproxProblem` IS a
+`repro.search.SearchProblem` with one tree, and the fitness factories
+delegate to the engine's `reference` / `kernel` backends. New code should use
+`repro.search` directly — `build_tree_problem` / `build_forest_problem` +
+`run_search` — which adds forest chromosomes, the fused multi-tree Pallas
+path, island parallelism, checkpointing and pareto artifacts.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import area as area_mod
-from repro.core import quant
-from repro.core.tree import ParallelTree, leaves_from_decisions
-from repro.datasets.synthetic import quantize_u8
-
-
-@dataclasses.dataclass
-class ApproxProblem:
-    """Immutable evaluation context for one (tree, dataset) pair."""
-
-    feature: jnp.ndarray     # (N,) int32
-    threshold: jnp.ndarray   # (N,) float32
-    path: jnp.ndarray        # (L, N) int8
-    path_len: jnp.ndarray    # (L,) int32
-    leaf_class: jnp.ndarray  # (L,) int32
-    x8: jnp.ndarray          # (B, F) int32 master codes (test set)
-    y: jnp.ndarray           # (B,) int32
-    area_lut: jnp.ndarray    # flat LUT (mm^2)
-    lut_offsets: jnp.ndarray  # (MAX_BITS+1,) int32
-    overhead_mm2: float
-    exact_area_mm2: float
-    exact_accuracy: float
-    n_classes: int
-
-    @property
-    def n_comparators(self) -> int:
-        return int(self.feature.shape[0])
-
-    @property
-    def n_genes(self) -> int:
-        return 2 * self.n_comparators
-
-
-def _decode_thresholds(problem: ApproxProblem, genes):
-    bits, margin = quant.decode_genes(genes)
-    t_int = quant.threshold_to_int(problem.threshold, bits)
-    t_sub = quant.substitute(t_int, margin, bits)
-    return bits, t_sub
-
-
-def chromosome_area_mm2(problem: ApproxProblem, genes):
-    bits, t_sub = _decode_thresholds(problem, genes)
-    idx = problem.lut_offsets[bits] + t_sub
-    return problem.area_lut[idx].sum() + problem.overhead_mm2
-
-
-def chromosome_accuracy(problem: ApproxProblem, genes):
-    bits, t_sub = _decode_thresholds(problem, genes)
-    x_gathered = problem.x8[:, problem.feature]              # (B, N)
-    x_p = quant.inputs_at_precision(x_gathered, bits)
-    decisions = x_p > t_sub[None, :]
-    leaf = leaves_from_decisions(decisions, problem.path, problem.path_len)
-    pred = problem.leaf_class[leaf]
-    return jnp.mean((pred == problem.y).astype(jnp.float32))
-
-
-def objectives(problem: ApproxProblem, genes):
-    """(accuracy_loss vs exact, normalized area) — both minimized.
-
-    Accuracy loss is relative to the exact bespoke design (paper's reference
-    point for the 1%/2% thresholds); area normalized by the exact design's
-    (paper Fig. 5 normalizes the same way).
-    """
-    acc = chromosome_accuracy(problem, genes)
-    area = chromosome_area_mm2(problem, genes)
-    return jnp.stack([problem.exact_accuracy - acc, area / problem.exact_area_mm2])
-
-
-def make_fitness_fn(problem: ApproxProblem):
-    """Population fitness: (P, 2N) genes -> (P, 2) objectives, jitted."""
-
-    @jax.jit
-    def fitness(pop):
-        return jax.vmap(functools.partial(objectives, problem))(pop)
-
-    return fitness
-
-
-def make_fitness_fn_kernel(problem: ApproxProblem, ptree: ParallelTree,
-                           n_features: int, interpret: bool | None = None):
-    """Kernel-backed fitness: accuracy via the fused Pallas tree_infer kernel
-    (population x batch grid), area via the LUT gather. Same objectives as
-    make_fitness_fn — asserted equal in tests."""
-    from repro.kernels import ops as kops  # local import: kernels are optional
-
-    operands = kops.prepare_tree_operands(ptree, n_features)
-    threshold = problem.threshold
-
-    @jax.jit
-    def fitness(pop):
-        scale, thr = kops.decode_population(threshold, pop)
-        preds = kops.tree_infer_predict(problem.x8, operands, scale, thr,
-                                        interpret=interpret)
-        acc = jnp.mean((preds == problem.y[None, :]).astype(jnp.float32), axis=1)
-        bits, margin = quant.decode_genes(pop)
-        t_int = quant.threshold_to_int(threshold[None, :], bits)
-        t_sub = quant.substitute(t_int, margin, bits)
-        areas = problem.area_lut[problem.lut_offsets[bits] + t_sub].sum(axis=1)
-        areas = areas + problem.overhead_mm2
-        return jnp.stack(
-            [problem.exact_accuracy - acc, areas / problem.exact_area_mm2], axis=1
-        )
-
-    return fitness
-
-
-def build_problem(ptree: ParallelTree, x_test: np.ndarray, y_test: np.ndarray) -> ApproxProblem:
-    lut, offsets = area_mod.build_area_lut()
-    x8 = quantize_u8(x_test).astype(np.int32)
-    overhead = area_mod.tree_overhead_mm2(ptree.n_comparators, ptree.n_leaves)
-
-    # exact design: 8-bit, zero margin
-    exact_bits = np.full(ptree.n_comparators, quant.MAX_BITS, dtype=np.int64)
-    t8 = np.clip(
-        np.floor(ptree.threshold * 256.0).astype(np.int64), 0, 255
-    )
-    exact_area = float(lut[offsets[exact_bits] + t8].sum() + overhead)
-
-    problem = ApproxProblem(
-        feature=jnp.asarray(ptree.feature),
-        threshold=jnp.asarray(ptree.threshold),
-        path=jnp.asarray(ptree.path),
-        path_len=jnp.asarray(ptree.path_len),
-        leaf_class=jnp.asarray(ptree.leaf_class),
-        x8=jnp.asarray(x8),
-        y=jnp.asarray(y_test.astype(np.int32)),
-        area_lut=jnp.asarray(lut),
-        lut_offsets=jnp.asarray(offsets),
-        overhead_mm2=float(overhead),
-        exact_area_mm2=exact_area,
-        exact_accuracy=0.0,  # filled below
-        n_classes=ptree.n_classes,
-    )
-    exact_acc = float(
-        chromosome_accuracy(problem, jnp.asarray(quant.exact_genes(ptree.n_comparators)))
-    )
-    return dataclasses.replace(problem, exact_accuracy=exact_acc)
-
-
-jax.tree_util.register_pytree_node(
-    ApproxProblem,
-    lambda p: (
-        (p.feature, p.threshold, p.path, p.path_len, p.leaf_class, p.x8, p.y,
-         p.area_lut, p.lut_offsets),
-        (p.overhead_mm2, p.exact_area_mm2, p.exact_accuracy, p.n_classes),
-    ),
-    lambda aux, children: ApproxProblem(*children, *aux),
+from repro.core.tree import ParallelTree
+from repro.search.problem import (
+    SearchProblem,
+    build_tree_problem,
+    chromosome_accuracy,
+    chromosome_area_mm2,
+    objectives,
 )
+from repro.search.backends import make_kernel_fitness, make_reference_fitness
+
+# Back-compat alias: the single-tree problem is the K=1 SearchProblem.
+ApproxProblem = SearchProblem
+
+
+def build_problem(ptree: ParallelTree, x_test: np.ndarray,
+                  y_test: np.ndarray) -> SearchProblem:
+    """Single-tree evaluation context (the K=1 `SearchProblem`)."""
+    return build_tree_problem(ptree, x_test, y_test)
+
+
+def make_fitness_fn(problem: SearchProblem):
+    """Population fitness: (P, 2N) genes -> (P, 2) objectives, jitted.
+
+    Adapter for `repro.search.make_reference_fitness` (pure-jnp backend).
+    """
+    return make_reference_fitness(problem)
+
+
+def make_fitness_fn_kernel(problem: SearchProblem,
+                           ptree: ParallelTree | None = None,
+                           n_features: int | None = None,
+                           interpret: bool | None = None):
+    """Kernel-backed fitness via the fused Pallas tree_infer program.
+
+    `ptree` / `n_features` are retained for signature compatibility; the
+    problem object already carries the tree layout and feature count.
+    """
+    del ptree, n_features  # recoverable from the SearchProblem itself
+    return make_kernel_fitness(problem, interpret=interpret)
+
+
+__all__ = [
+    "ApproxProblem",
+    "build_problem",
+    "chromosome_accuracy",
+    "chromosome_area_mm2",
+    "objectives",
+    "make_fitness_fn",
+    "make_fitness_fn_kernel",
+]

@@ -20,7 +20,7 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
+from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import nsga2
@@ -35,7 +35,7 @@ def sharded_fitness(fitness_fn, mesh: Mesh, axis: str = "data"):
         mesh=mesh,
         in_specs=(pspec,),
         out_specs=pspec,
-        check_vma=False,
+        check_rep=False,
     )
     def _eval(genes):
         return fitness_fn(genes)
@@ -98,7 +98,7 @@ def make_island_step(fitness_fn, mesh: Mesh, cfg: IslandConfig, axis: str = "dat
         mesh=mesh,
         in_specs=(state_specs,),
         out_specs=state_specs,
-        check_vma=False,
+        check_rep=False,
     )
     def _round(state: nsga2.NSGA2State) -> nsga2.NSGA2State:
         local = nsga2.NSGA2State(
@@ -116,14 +116,18 @@ def make_island_step(fitness_fn, mesh: Mesh, cfg: IslandConfig, axis: str = "dat
 
 
 def init_islands(key, fitness_fn, n_genes: int, mesh: Mesh, cfg: IslandConfig,
-                 axis: str = "data") -> nsga2.NSGA2State:
-    """Initialize per-island states, already laid out sharded over `axis`."""
+                 axis: str = "data", seed_genes=None) -> nsga2.NSGA2State:
+    """Initialize per-island states, already laid out sharded over `axis`.
+
+    seed_genes: optional known-good designs injected into every island's
+    initial population (see nsga2.init_state)."""
     n_islands = mesh.shape[axis]
     keys = jax.random.split(key, n_islands)
     local_cfg = dataclasses.replace(cfg.nsga, pop_size=cfg.local_pop)
 
     def one(k):
-        return nsga2.init_state(k, fitness_fn, n_genes, local_cfg)
+        return nsga2.init_state(k, fitness_fn, n_genes, local_cfg,
+                                seed_genes=seed_genes)
 
     states = [one(k) for k in keys]
     genes = jnp.concatenate([s.genes for s in states])
@@ -146,9 +150,11 @@ def init_islands(key, fitness_fn, n_genes: int, mesh: Mesh, cfg: IslandConfig,
 
 def run_islands(key, fitness_fn, n_genes: int, mesh: Mesh, cfg: IslandConfig,
                 n_rounds: int, axis: str = "data",
-                state: nsga2.NSGA2State | None = None) -> nsga2.NSGA2State:
+                state: nsga2.NSGA2State | None = None,
+                seed_genes=None) -> nsga2.NSGA2State:
     if state is None:
-        state = init_islands(key, fitness_fn, n_genes, mesh, cfg, axis)
+        state = init_islands(key, fitness_fn, n_genes, mesh, cfg, axis,
+                             seed_genes)
     step = make_island_step(fitness_fn, mesh, cfg, axis)
     for _ in range(n_rounds):
         state = step(state)

@@ -9,8 +9,15 @@ makes the joint search strictly richer than per-tree searches: moving two
 trees' thresholds to the SAME hardware-friendly value collapses them into
 one comparator.
 
-Everything reuses core.{train,tree,quant,approx,nsga2}; fitness is the
-voted accuracy, area the CSE'd comparator sum + per-tree overheads.
+Forest *search* now runs through the unified engine in `repro.search`
+(DESIGN.md §7): `build_forest_problem(forest, ...)` lays the forest out as
+one block-diagonal super-tree whose vote matmul evaluates every tree in a
+single fused tensor program (or ONE Pallas kernel launch with
+`backend="kernel"`), instead of this module's historical K-iteration Python
+loop. `forest_predict` below is retained as the per-tree *oracle* the fused
+paths are bit-exactness-tested against; `make_forest_fitness` is a thin
+adapter over the engine's reference backend. Area scoring with cross-tree
+CSE (`forest_area_mm2`) stays here.
 """
 from __future__ import annotations
 
@@ -20,10 +27,9 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import approx, area as area_mod, quant
+from repro.core import area as area_mod, quant
 from repro.core.train import TreeArrays, train_tree
 from repro.core.tree import ParallelTree, to_parallel, leaves_from_decisions
-from repro.datasets.synthetic import quantize_u8
 
 
 @dataclasses.dataclass
@@ -56,7 +62,12 @@ def train_forest(x, y, n_classes, n_trees=5, seed=0, feature_frac=0.7):
 
 
 def forest_predict(forest: Forest, x8, bits_all, marg_all):
-    """Majority vote over quantized trees. bits/marg: concatenated per-tree
+    """Majority vote over quantized trees — the sequential per-tree ORACLE.
+
+    Evaluates trees one by one in a Python loop (K small programs). Kept as
+    the reference the fused paths (`repro.search` reference backend and the
+    block-diagonal Pallas kernel) are bit-exactness-tested against; use those
+    for anything performance-sensitive. bits/marg: concatenated per-tree
     comparator genes (decoded)."""
     votes = jnp.zeros((x8.shape[0], forest.n_classes), jnp.float32)
     off = 0
@@ -103,38 +114,15 @@ def forest_area_mm2(forest: Forest, bits_all, marg_all, dedup=True) -> float:
 def make_forest_fitness(forest: Forest, x_test, y_test):
     """(P, 2*N_total) genes -> (P, 2) objectives (accuracy loss, norm area).
 
-    Accuracy is jnp/jit (vote over trees); area uses the additive LUT like
-    the paper's estimator (CSE only at final scoring, as in benchmarks).
+    Thin adapter over the unified engine: builds the block-diagonal
+    `SearchProblem` for this forest and returns its reference-backend fitness
+    (one fused vote-matmul program per population — no per-tree loop), plus
+    the exact-design (accuracy, area) reference the objectives normalize by.
+    Pass the same problem to `repro.search.run_search` for the kernel/island
+    backends, checkpointing and artifacts.
     """
-    x8 = jnp.asarray(quantize_u8(x_test).astype(np.int32))
-    y = jnp.asarray(y_test.astype(np.int32))
-    lut, offsets = area_mod.build_area_lut()
-    lut, offsets = jnp.asarray(lut), jnp.asarray(offsets)
-    thresholds = jnp.concatenate(
-        [jnp.asarray(p.threshold) for p in forest.ptrees])
-    overhead = area_mod.tree_overhead_mm2(
-        forest.n_comparators, sum(p.n_leaves for p in forest.ptrees))
+    from repro.search import build_forest_problem, make_reference_fitness
 
-    exact_bits = jnp.full((forest.n_comparators,), 8, jnp.int32)
-    zero_marg = jnp.zeros((forest.n_comparators,), jnp.int32)
-    t8 = quant.threshold_to_int(thresholds, exact_bits)
-    exact_area = float(lut[offsets[exact_bits] + t8].sum() + overhead)
-
-    def acc_of(bits, marg):
-        pred = forest_predict(forest, x8, bits, marg)
-        return jnp.mean((pred == y).astype(jnp.float32))
-
-    exact_acc = float(acc_of(exact_bits, zero_marg))
-
-    @jax.jit
-    def fitness(pop):
-        def one(genes):
-            bits, marg = quant.decode_genes(genes)
-            t_int = quant.substitute(
-                quant.threshold_to_int(thresholds, bits), marg, bits)
-            a = lut[offsets[bits] + t_int].sum() + overhead
-            return jnp.stack([exact_acc - acc_of(bits, marg),
-                              a / exact_area])
-        return jax.vmap(one)(pop)
-
-    return fitness, exact_acc, exact_area
+    problem = build_forest_problem(forest, x_test, y_test)
+    return (make_reference_fitness(problem), problem.exact_accuracy,
+            problem.exact_area_mm2)

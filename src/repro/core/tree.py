@@ -81,6 +81,40 @@ def to_parallel(tree: TreeArrays) -> ParallelTree:
     )
 
 
+def concatenate_ptrees(ptrees) -> dict:
+    """Concatenated comparator/leaf arrays + block-diagonal super-tree path.
+
+    THE single definition of the multi-tree layout (DESIGN.md §7): the
+    comparator axis concatenates every tree's comparators, the leaf axis
+    every tree's leaves, and `path` is block-diagonal so each leaf row only
+    sees its own tree's comparators. Shared by `repro.search.problem` and
+    `repro.kernels.ops` so the reference and kernel operand layouts cannot
+    diverge. Returns numpy arrays.
+    """
+    n_total = sum(pt.n_comparators for pt in ptrees)
+    l_total = sum(pt.n_leaves for pt in ptrees)
+    path = np.zeros((l_total, n_total), np.int8)
+    leaf_tree = np.concatenate([
+        np.full(pt.n_leaves, k, np.int32) for k, pt in enumerate(ptrees)])
+    n_off = l_off = 0
+    for pt in ptrees:
+        path[l_off:l_off + pt.n_leaves, n_off:n_off + pt.n_comparators] = pt.path
+        n_off += pt.n_comparators
+        l_off += pt.n_leaves
+    return {
+        "feature": np.concatenate([pt.feature for pt in ptrees]).astype(np.int32),
+        "threshold": np.concatenate(
+            [pt.threshold for pt in ptrees]).astype(np.float32),
+        "path": path,
+        "path_len": np.concatenate(
+            [pt.path_len for pt in ptrees]).astype(np.int32),
+        "n_neg": np.concatenate([pt.n_neg for pt in ptrees]).astype(np.int32),
+        "leaf_class": np.concatenate(
+            [pt.leaf_class for pt in ptrees]).astype(np.int32),
+        "leaf_tree": leaf_tree,
+    }
+
+
 # ---------------------------------------------------------------------------
 # pure-jnp reference predictors (oracles for the Pallas kernel)
 # ---------------------------------------------------------------------------

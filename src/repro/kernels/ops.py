@@ -14,7 +14,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import quant
-from repro.core.tree import ParallelTree
+from repro.core.tree import ParallelTree, concatenate_ptrees
 from repro.kernels import domination as _dom
 from repro.kernels import qmatmul as _qmm
 from repro.kernels import tree_infer as _ti
@@ -38,8 +38,13 @@ def _pad_to(x, mult, axis, value=0.0):
 # tree_infer
 # ---------------------------------------------------------------------------
 
-def prepare_tree_operands(pt: ParallelTree, n_features: int):
-    """Static (per-tree) operands for the fused inference kernel, padded.
+def prepare_operands(feature, path, path_len, n_neg, leaf_class,
+                     n_classes: int, n_features: int):
+    """Padded kernel operands from (concatenated) comparator/leaf arrays.
+
+    `path` (L, N) may be a single tree's path matrix or the block-diagonal
+    super-tree of a forest (e.g. `SearchProblem.path`) — the kernel dataflow
+    is identical either way (DESIGN.md §7).
 
     Padding is correctness-preserving:
       - SEL extra columns are all-zero -> x_sel = 0, thr pad = 2^8 so the
@@ -47,19 +52,49 @@ def prepare_tree_operands(pt: ParallelTree, n_features: int):
       - PATH pad rows/cols are zero; target pad = -1 is unsatisfiable, so
         padded leaves never fire; padded classes never win argmax.
     """
-    n, l, c = pt.n_comparators, pt.n_leaves, pt.n_classes
+    feature = np.asarray(feature)
+    path = np.asarray(path)
+    path_len = np.asarray(path_len)
+    n_neg = np.asarray(n_neg)
+    leaf_class = np.asarray(leaf_class)
+    l, n = path.shape
     sel = np.zeros((n_features, n), np.float32)
-    sel[pt.feature, np.arange(n)] = 1.0
-    path_t = pt.path.T.astype(np.float32)                    # (N, L)
-    target = (pt.path_len - pt.n_neg).astype(np.float32)[None]  # (1, L)
-    cls1h = np.zeros((l, c), np.float32)
-    cls1h[np.arange(l), pt.leaf_class] = 1.0
+    sel[feature, np.arange(n)] = 1.0
+    path_t = path.T.astype(np.float32)                          # (N, L)
+    target = (path_len - n_neg).astype(np.float32)[None]        # (1, L)
+    cls1h = np.zeros((l, n_classes), np.float32)
+    cls1h[np.arange(l), leaf_class] = 1.0
 
     sel = _pad_to(_pad_to(jnp.asarray(sel), 128, 0), 128, 1)
     path_t = _pad_to(_pad_to(jnp.asarray(path_t), 128, 0), 128, 1)
     target = _pad_to(jnp.asarray(target), 128, 1, value=-1.0)
     cls1h = _pad_to(_pad_to(jnp.asarray(cls1h), 128, 0), 128, 1)
     return sel, path_t, target, cls1h
+
+
+def prepare_forest_operands(ptrees, n_features: int):
+    """Static operands for fused multi-tree inference (DESIGN.md §7).
+
+    The forest is laid out as one block-diagonal "super-tree": the comparator
+    axis concatenates every tree's comparators, the leaf axis every tree's
+    leaves, and PATH^T is block-diagonal so each leaf row only sees its own
+    tree's comparators. Exactly one leaf per tree satisfies its path, so the
+    vote matmul (sat @ CLS1H) accumulates one vote per tree per class — the
+    kernel's argmax IS the majority vote, with no per-tree Python loop.
+
+    A single ``ParallelTree`` is the K=1 special case (`prepare_tree_operands`).
+    """
+    arrays = concatenate_ptrees(ptrees)
+    return prepare_operands(
+        arrays["feature"], arrays["path"], arrays["path_len"],
+        arrays["n_neg"], arrays["leaf_class"],
+        max(pt.n_classes for pt in ptrees), n_features,
+    )
+
+
+def prepare_tree_operands(pt: ParallelTree, n_features: int):
+    """Single-tree operands: the K=1 case of `prepare_forest_operands`."""
+    return prepare_forest_operands([pt], n_features)
 
 
 def decode_population(threshold, genes):
@@ -74,12 +109,16 @@ def decode_population(threshold, genes):
     return scale, t_sub.astype(jnp.float32)
 
 
-@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
-def tree_infer_predict(x8, pt_operands, scale, thr, *, block_b=256, interpret=None):
-    """(P, B) predicted classes for a population of approximate trees.
+@functools.partial(jax.jit, static_argnames=("block_b", "block_l", "interpret"))
+def tree_infer_predict(x8, pt_operands, scale, thr, *, block_b=256,
+                       block_l=None, interpret=None):
+    """(P, B) predicted classes for a population of approximate trees/forests.
 
-    x8 (B, F) int; pt_operands from prepare_tree_operands (already padded);
-    scale/thr (P, N_padded-able).
+    x8 (B, F) int; pt_operands from prepare_tree_operands /
+    prepare_forest_operands (already padded); scale/thr (P, N_padded-able).
+    For forest operands the returned class is the majority vote over trees
+    (ties -> lowest class index, matching `forest_predict`). ``block_l``
+    tiles the concatenated leaf axis for large forests.
     """
     interpret = _auto_interpret() if interpret is None else interpret
     sel, path_t, target, cls1h = pt_operands
@@ -89,9 +128,17 @@ def tree_infer_predict(x8, pt_operands, scale, thr, *, block_b=256, interpret=No
     scale = _pad_to(scale, n, 1)[:, :n]
     # padded comparators must never fire: thr pad = 256 > any x_p
     thr = _pad_to(thr, n, 1, value=256.0)[:, :n]
+    if block_l is not None:
+        # round down to a 128-multiple that divides the padded leaf axis, so
+        # one configured tile size works for any forest size (128 always
+        # divides the padded L)
+        l_pad = path_t.shape[1]
+        block_l = max(128, (min(block_l, l_pad) // 128) * 128)
+        while l_pad % block_l:
+            block_l -= 128
     scores = _ti.tree_infer_scores(
         x8f, sel, scale, thr, path_t, target, cls1h,
-        block_b=block_b, interpret=interpret,
+        block_b=block_b, block_l=block_l, interpret=interpret,
     )
     return jnp.argmax(scores[:, : x8.shape[0], :], axis=-1)
 

@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: fused approximate-DT inference (the paper's hot loop).
+"""Pallas TPU kernel: fused approximate-DT/forest inference (the paper's hot loop).
 
 The GA evaluates `population x test_set` predictions every generation. This
 kernel computes one (chromosome, batch-block) cell of that product with the
@@ -10,16 +10,29 @@ step lands on the MXU / VPU:
     d       = x_p > t'                   comparator array           (VPU)
     score   = d @ PATH^T                 path matmul                (MXU)
     sat     = (score == target)          leaf decode                (VPU)
-    cls     = argmax(sat @ CLS1H)        class one-hot reduce       (MXU)
+    votes   = sat @ CLS1H                vote matmul                (MXU)
 
-Block layout (VMEM): the tree tensors (SEL: F x N, PATH: L x N, CLS1H: L x C)
-are small (N, L <= 1024 after padding) and stay resident; the batch is tiled
-by `block_b` rows. Grid = (population, batch_blocks): each chromosome's
-per-comparator (shift_scale, threshold) vector is a [1, N] VMEM tile indexed
-by the population coordinate.
+For a single tree exactly one leaf satisfies its path, so `votes` is the
+one-hot of the predicted class. For a *forest* the same program evaluates all
+trees at once (DESIGN.md §7): the comparator axis is the concatenation of all
+trees' comparators, PATH is block-diagonal (leaf rows only see their own
+tree's comparators), and one leaf per tree fires — `votes` then accumulates
+one vote per tree per class, i.e. the vote matmul IS the majority-vote adder
+tree of the bespoke RF circuit. argmax over classes = voted prediction.
 
-All integer quantities are exact in f32 (values < 2^24), so MXU execution is
-bit-exact vs the integer reference in `repro.kernels.ref`.
+Block layout (VMEM): the tree tensors (SEL: F x N, PATH: N x L, CLS1H: L x C)
+stay resident per grid cell; the batch is tiled by `block_b` rows and the leaf
+axis may additionally be tiled by `block_l` (forests concatenate many trees'
+leaves, so L can outgrow a single VMEM-resident block). Grid =
+(population, batch_blocks, leaf_blocks): each chromosome's per-comparator
+(shift_scale, threshold) vector is a [1, N] VMEM tile indexed by the
+population coordinate; the leaf axis is the innermost (sequential) grid
+dimension so partial vote matmuls accumulate into the same revisited output
+block.
+
+All integer quantities are exact in f32 (values < 2^24) and vote accumulation
+adds small exact integers, so MXU execution is bit-exact vs the integer
+reference in `repro.kernels.ref`.
 """
 from __future__ import annotations
 
@@ -28,30 +41,42 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
 def _kernel(x_ref, sel_ref, scale_ref, thr_ref, path_ref, target_ref,
             cls1h_ref, out_ref):
-    # x_ref:      (block_b, F)   f32   master 8-bit codes
-    # sel_ref:    (F, N)         f32   one-hot feature selector
-    # scale_ref:  (1, N)         f32   2^-(8-p) per comparator (this chromosome)
-    # thr_ref:    (1, N)         f32   substituted integer threshold t'
-    # path_ref:   (N, L)         f32   path matrix transpose, entries {-1,0,1}
-    # target_ref: (1, L)         f32   path_len - n_neg
-    # cls1h_ref:  (L, C)         f32   leaf -> class one-hot
-    # out_ref:    (block_b, C)   f32   per-class satisfied-leaf counts
+    # x_ref:      (block_b, F)    f32   master 8-bit codes
+    # sel_ref:    (F, N)          f32   one-hot feature selector
+    # scale_ref:  (1, N)          f32   2^-(8-p) per comparator (this chromosome)
+    # thr_ref:    (1, N)          f32   substituted integer threshold t'
+    # path_ref:   (N, block_l)    f32   path matrix transpose, entries {-1,0,1}
+    # target_ref: (1, block_l)    f32   path_len - n_neg
+    # cls1h_ref:  (block_l, C)    f32   leaf -> class one-hot
+    # out_ref:    (1, block_b, C) f32   per-class vote counts (accumulated
+    #                                   over the leaf-block grid dimension)
     x = x_ref[...]
     x_sel = jax.lax.dot(x, sel_ref[...], precision=jax.lax.Precision.HIGHEST)
     x_p = jnp.floor(x_sel * scale_ref[...])
     d = (x_p > thr_ref[...]).astype(jnp.float32)
     score = jax.lax.dot(d, path_ref[...], precision=jax.lax.Precision.HIGHEST)
     sat = (score == target_ref[...]).astype(jnp.float32)
-    out_ref[0, :, :] = jax.lax.dot(sat, cls1h_ref[...],
-                                   precision=jax.lax.Precision.HIGHEST)
+    votes = jax.lax.dot(sat, cls1h_ref[...],
+                        precision=jax.lax.Precision.HIGHEST)
+
+    l_idx = pl.program_id(2)
+
+    @pl.when(l_idx == 0)
+    def _init():
+        out_ref[0, :, :] = votes
+
+    @pl.when(l_idx != 0)
+    def _accum():
+        out_ref[0, :, :] += votes
 
 
 @functools.partial(
-    jax.jit, static_argnames=("block_b", "interpret")
+    jax.jit, static_argnames=("block_b", "block_l", "interpret")
 )
 def tree_infer_scores(
     x8f,      # (B, F)  f32 master codes (padded: B % block_b == 0, F % 128 == 0)
@@ -63,27 +88,39 @@ def tree_infer_scores(
     cls1h,    # (L, C)  f32
     *,
     block_b: int = 256,
+    block_l: int | None = None,
     interpret: bool = False,
 ):
-    """Returns per-class scores (P, B, C); argmax over C = predicted class."""
+    """Returns per-class vote counts (P, B, C); argmax over C = prediction.
+
+    ``block_l`` tiles the leaf axis (must divide L); ``None`` keeps the whole
+    (padded) leaf axis resident — the single-tree fast path.
+    """
     n_pop = scale.shape[0]
     b, f = x8f.shape
     n = sel.shape[1]
     l, c = cls1h.shape
-    grid = (n_pop, b // block_b)
+    if block_l is None:
+        block_l = l
+    if l % block_l != 0:
+        raise ValueError(f"block_l={block_l} must divide padded L={l}")
+    grid = (n_pop, b // block_b, l // block_l)
     return pl.pallas_call(
         _kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((block_b, f), lambda p, i: (i, 0)),
-            pl.BlockSpec((f, n), lambda p, i: (0, 0)),
-            pl.BlockSpec((1, n), lambda p, i: (p, 0)),
-            pl.BlockSpec((1, n), lambda p, i: (p, 0)),
-            pl.BlockSpec((n, l), lambda p, i: (0, 0)),
-            pl.BlockSpec((1, l), lambda p, i: (0, 0)),
-            pl.BlockSpec((l, c), lambda p, i: (0, 0)),
+            pl.BlockSpec((block_b, f), lambda p, i, j: (i, 0)),
+            pl.BlockSpec((f, n), lambda p, i, j: (0, 0)),
+            pl.BlockSpec((1, n), lambda p, i, j: (p, 0)),
+            pl.BlockSpec((1, n), lambda p, i, j: (p, 0)),
+            pl.BlockSpec((n, block_l), lambda p, i, j: (0, j)),
+            pl.BlockSpec((1, block_l), lambda p, i, j: (0, j)),
+            pl.BlockSpec((block_l, c), lambda p, i, j: (j, 0)),
         ],
-        out_specs=pl.BlockSpec((1, block_b, c), lambda p, i: (p, i, 0)),
+        out_specs=pl.BlockSpec((1, block_b, c), lambda p, i, j: (p, i, 0)),
         out_shape=jax.ShapeDtypeStruct((n_pop, b, c), jnp.float32),
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
         interpret=interpret,
     )(x8f, sel, scale, thr, path_t, target, cls1h)

@@ -15,7 +15,7 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
+from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
 
@@ -58,7 +58,7 @@ def make_crosspod_mean(mesh, axis: str = "pod"):
         return P()  # replicated entering the wrapper; shard_map splits axis
 
     @partial(shard_map, mesh=mesh, in_specs=(P(),), out_specs=P(),
-             check_vma=False)
+             check_rep=False)
     def _mean(g):
         return compressed_psum(g, axis)
 

@@ -1,0 +1,58 @@
+"""Unified design-space search engine (DESIGN.md §7).
+
+One abstraction for every NSGA-II dual-approximation search the repo runs:
+
+  `SearchProblem`   — comparator arrays + block-diagonal super-tree path
+                      matrices + dataset + area LUT + exact reference,
+                      covering a single `ParallelTree` and a `Forest` alike;
+  fitness backends  — `reference` (pure jnp), `kernel` (fused Pallas
+                      multi-tree inference), `islands` (per-device GA with
+                      ring migration);
+  `run_search`      — the one driver: checkpointable state, pareto-front
+                      artifacts, backend selection.
+
+CLI: ``python -m repro.search --dataset seeds --backend kernel --trees 4``.
+"""
+from repro.search.problem import (
+    SearchProblem,
+    build_problem,
+    build_tree_problem,
+    build_forest_problem,
+    chromosome_accuracy,
+    chromosome_area_mm2,
+    decode_chromosome,
+    objectives,
+    predict_votes,
+)
+from repro.search.backends import (
+    BACKENDS,
+    make_fitness,
+    make_kernel_fitness,
+    make_reference_fitness,
+)
+from repro.search.engine import (
+    SearchConfig,
+    SearchResult,
+    run_search,
+    write_pareto_artifact,
+)
+
+__all__ = [
+    "SearchProblem",
+    "build_problem",
+    "build_tree_problem",
+    "build_forest_problem",
+    "chromosome_accuracy",
+    "chromosome_area_mm2",
+    "decode_chromosome",
+    "objectives",
+    "predict_votes",
+    "BACKENDS",
+    "make_fitness",
+    "make_kernel_fitness",
+    "make_reference_fitness",
+    "SearchConfig",
+    "SearchResult",
+    "run_search",
+    "write_pareto_artifact",
+]

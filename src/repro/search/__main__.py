@@ -1,0 +1,106 @@
+"""CLI for the unified search engine.
+
+    PYTHONPATH=src python -m repro.search --dataset seeds
+    PYTHONPATH=src python -m repro.search --dataset seeds --trees 4 \
+        --backend kernel --pop 64 --gens 40 --out runs/seeds_forest
+
+Trains the exact bespoke tree (or a bootstrap forest with --trees K), runs
+the NSGA-II dual-approximation search on the selected backend, prints the
+pareto front and the best design under the 1% accuracy-loss budget, and —
+with --out — writes pareto.json plus (single-tree only) the bespoke Verilog
+of the selected design.
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from repro.core import area
+from repro.core.forest import train_forest
+from repro.core.train import train_tree
+from repro.core.tree import to_parallel
+from repro.datasets import DATASET_SPECS, load_dataset
+from repro import search
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(prog="python -m repro.search")
+    ap.add_argument("--dataset", default="seeds",
+                    choices=sorted(DATASET_SPECS))
+    ap.add_argument("--trees", type=int, default=1,
+                    help="1 = single bespoke DT; K>1 = bootstrap forest with "
+                         "a joint 2*sum(N_k)-gene chromosome")
+    ap.add_argument("--backend", default="reference",
+                    choices=list(search.BACKENDS))
+    ap.add_argument("--pop", type=int, default=64)
+    ap.add_argument("--gens", type=int, default=40)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=None, help="artifact directory")
+    ap.add_argument("--checkpoint-every", type=int, default=0)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--max-loss", type=float, default=0.01)
+    args = ap.parse_args(argv)
+
+    ds = load_dataset(args.dataset)
+    if args.trees <= 1:
+        tree = train_tree(ds.x_train, ds.y_train, ds.n_classes)
+        pt = to_parallel(tree)
+        problem = search.build_tree_problem(pt, ds.x_test, ds.y_test)
+        kind = "tree"
+    else:
+        forest = train_forest(ds.x_train, ds.y_train, ds.n_classes,
+                              n_trees=args.trees)
+        problem = search.build_forest_problem(forest, ds.x_test, ds.y_test)
+        kind = f"forest[{args.trees}]"
+
+    print(f"== {args.dataset} {kind}: comparators={problem.n_comparators} "
+          f"leaves={problem.n_leaves} exact_acc={problem.exact_accuracy:.3f} "
+          f"exact_area={problem.exact_area_mm2:.1f}mm^2 "
+          f"power={area.power_mw(problem.exact_area_mm2):.2f}mW ==")
+
+    cfg = search.SearchConfig(
+        backend=args.backend, pop_size=args.pop, n_generations=args.gens,
+        seed=args.seed, out_dir=args.out,
+        checkpoint_every=args.checkpoint_every, resume=args.resume,
+    )
+    print(f"== run_search backend={cfg.backend} pop={cfg.pop_size} "
+          f"gens={cfg.n_generations} ==")
+    result = search.run_search(problem, cfg)
+
+    print(f"search wall time: {result.wall_s:.1f}s "
+          f"({result.n_evaluations} chromosome evaluations)")
+    print("pareto front (acc_loss, normalized area):")
+    for o in result.pareto_objs:
+        print(f"  {o[0]:+.4f}  {o[1]:.3f}  ({1 / max(o[1], 1e-9):.2f}x smaller)")
+
+    best = result.best_under_loss(args.max_loss)
+    if best is None:
+        print(f"no design within {args.max_loss:.0%} accuracy loss")
+        return
+    o, genes = best
+    a_mm2 = float(o[1]) * problem.exact_area_mm2
+    print(f"\nselected @<={args.max_loss:.0%} loss: area={a_mm2:.1f}mm^2 "
+          f"({1 / o[1]:.2f}x), power={area.power_mw(a_mm2):.2f}mW "
+          f"{'< 3mW: printed-battery OK' if area.power_mw(a_mm2) < 3 else ''}")
+
+    if args.out and args.trees <= 1:
+        import jax.numpy as jnp
+        from repro.core import quant, rtl
+        bits, marg = quant.decode_genes(jnp.asarray(genes))
+        t_int = quant.substitute(
+            quant.threshold_to_int(jnp.asarray(pt.threshold), bits),
+            marg, bits)
+        verilog = rtl.emit_verilog(pt, np.asarray(bits), np.asarray(t_int))
+        import os
+        path = os.path.join(args.out, f"bespoke_{args.dataset}.v")
+        with open(path, "w") as f:
+            f.write(verilog)
+        print(f"bespoke RTL written to {path} "
+              f"({len(verilog.splitlines())} lines)")
+    if args.out:
+        print(f"pareto artifact: {args.out}/pareto.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+"""Pluggable fitness backends over a `SearchProblem` (DESIGN.md §7).
+
+Every backend maps a population of real-coded genes (P, 2N) to objectives
+(P, 2) = (accuracy loss vs exact design, normalized area), bit-compatible
+with each other:
+
+  reference — pure-jnp vmap of the block-diagonal super-tree dataflow; the
+              portable oracle (and what `core.approx.make_fitness_fn`
+              historically computed for K=1).
+  kernel    — the fused Pallas `tree_infer` program: the whole
+              population x test-set x forest evaluation is ONE kernel launch
+              (grid = population x batch-blocks x leaf-blocks), replacing
+              the K-iteration per-tree Python loop of the old forest path.
+  islands   — not a fitness function but a *driver* strategy (per-device
+              NSGA-II islands with ring migration, `core.dist`); it reuses
+              the reference fitness per island and is selected through
+              `repro.search.engine.run_search`.
+
+The accuracy term of `reference` and `kernel` agree bit-exactly: every
+integer quantity is exact in f32 (< 2^24) and vote accumulation adds small
+exact integers (see `repro.kernels.tree_infer`).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+from repro.search.problem import SearchProblem, objectives
+
+BACKENDS = ("reference", "kernel", "islands")
+
+
+def make_reference_fitness(problem: SearchProblem):
+    """Population fitness: (P, 2N) genes -> (P, 2) objectives, jitted."""
+
+    @jax.jit
+    def fitness(pop):
+        return jax.vmap(functools.partial(objectives, problem))(pop)
+
+    return fitness
+
+
+def make_kernel_fitness(problem: SearchProblem, *, block_b: int = 256,
+                        block_l: int | None = None,
+                        interpret: bool | None = None):
+    """Kernel-backed fitness: accuracy via ONE fused Pallas launch for the
+    entire (population x test-set x forest) product, area via the LUT gather.
+    Same objectives as `make_reference_fitness` — asserted equal in tests."""
+    from repro.kernels import ops as kops  # local import: kernels are optional
+
+    # problem.path is already the block-diagonal super-tree layout.
+    operands = kops.prepare_operands(
+        problem.feature, problem.path, problem.path_len, problem.n_neg,
+        problem.leaf_class, problem.n_classes, problem.n_features)
+    threshold = problem.threshold
+
+    @jax.jit
+    def fitness(pop):
+        scale, thr = kops.decode_population(threshold, pop)
+        preds = kops.tree_infer_predict(problem.x8, operands, scale, thr,
+                                        block_b=block_b, block_l=block_l,
+                                        interpret=interpret)
+        acc = jnp.mean((preds == problem.y[None, :]).astype(jnp.float32), axis=1)
+        bits, margin = quant.decode_genes(pop)
+        t_int = quant.threshold_to_int(threshold[None, :], bits)
+        t_sub = quant.substitute(t_int, margin, bits)
+        areas = problem.area_lut[problem.lut_offsets[bits] + t_sub].sum(axis=1)
+        areas = areas + problem.overhead_mm2
+        return jnp.stack(
+            [problem.exact_accuracy - acc, areas / problem.exact_area_mm2],
+            axis=1,
+        )
+
+    return fitness
+
+
+def make_fitness(problem: SearchProblem, backend: str = "reference", **kw):
+    """Factory: backend name -> population fitness function."""
+    if backend == "reference":
+        return make_reference_fitness(problem)
+    if backend == "kernel":
+        return make_kernel_fitness(problem, **kw)
+    raise ValueError(
+        f"unknown fitness backend {backend!r}; islands is driver-level "
+        f"(use repro.search.engine.run_search), options: {BACKENDS}")

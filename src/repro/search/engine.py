@@ -1,0 +1,248 @@
+"""`run_search`: the one NSGA-II driver behind tree, forest and island search.
+
+Collapses the three hand-rolled GA loops (core.approx quickstart path,
+core.forest fitness, core.dist islands) into a single entry point
+(DESIGN.md §7):
+
+    problem = search.build_tree_problem(ptree, x_test, y_test)
+    result  = search.run_search(problem, SearchConfig(backend="kernel"))
+
+Features over the old loops:
+  - backend selection: `reference` (pure jnp), `kernel` (fused Pallas,
+    one launch per generation for the whole population x test-set x forest
+    product), `islands` (per-device NSGA-II + ring migration via core.dist);
+  - checkpointable state: `checkpoint_every` saves the full NSGA2State
+    through `repro.runtime.checkpoint` (atomic, retained-K) and
+    `resume=True` continues from the latest checkpoint;
+  - pareto-front artifacts: `out_dir` receives pareto.json (objectives,
+    genes, decoded per-comparator designs) for downstream RTL emission.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import nsga2, quant
+from repro.search import backends as _backends
+from repro.search.problem import SearchProblem
+
+
+@dataclasses.dataclass
+class SearchConfig:
+    backend: str = "reference"      # reference | kernel | islands
+    pop_size: int = 64
+    n_generations: int = 40
+    seed: int = 0
+    seed_exact: bool = True         # inject the exact design into the init pop
+    # kernel backend
+    block_b: int = 256
+    block_l: int | None = None
+    interpret: bool | None = None   # None = auto (interpret off TPU)
+    # islands backend (generations round UP to whole migration rounds;
+    # checkpoint_every/resume are not supported and raise)
+    migrate_every: int = 5
+    n_migrate: int = 4
+    # artifacts / checkpointing
+    out_dir: str | None = None
+    checkpoint_every: int = 0       # generations between saves; 0 = off
+    resume: bool = False
+
+
+@dataclasses.dataclass
+class SearchResult:
+    state: nsga2.NSGA2State
+    pareto_objs: np.ndarray    # (K, 2) accuracy-loss / normalized-area
+    pareto_genes: np.ndarray   # (K, 2N)
+    backend: str
+    wall_s: float
+    n_evaluations: int
+
+    def best_under_loss(self, max_loss: float = 0.01):
+        """Smallest-area pareto point within an accuracy-loss budget."""
+        ok = self.pareto_objs[:, 0] <= max_loss + 1e-9
+        if not ok.any():
+            return None
+        idx = np.flatnonzero(ok)
+        best = idx[np.argmin(self.pareto_objs[idx, 1])]
+        return self.pareto_objs[best], self.pareto_genes[best]
+
+
+def _ckpt_dir(cfg: SearchConfig) -> str | None:
+    return os.path.join(cfg.out_dir, "ckpt") if cfg.out_dir else None
+
+
+def _seed_genes(problem: SearchProblem, cfg: SearchConfig):
+    return problem.exact_genes() if cfg.seed_exact else None
+
+
+def _restore_template(problem: SearchProblem, cfg: SearchConfig):
+    """NSGA2State skeleton for checkpoint.restore — shapes/dtypes only, no
+    fitness evaluation (init_state would run a full population eval just to
+    be overwritten by the restored arrays)."""
+    p = cfg.pop_size
+    return nsga2.NSGA2State(
+        genes=jnp.zeros((p, problem.n_genes), jnp.float32),
+        objs=jnp.zeros((p, 2), jnp.float32),
+        rank=jnp.zeros((p,), jnp.int32),
+        crowd=jnp.zeros((p,), jnp.float32),
+        key=jax.random.PRNGKey(0),
+        generation=jnp.int32(0),
+    )
+
+
+def _run_single(problem: SearchProblem, cfg: SearchConfig, fitness):
+    """reference/kernel driver with optional checkpoint/resume.
+
+    Returns (state, n_evaluations actually run in THIS call)."""
+    from repro.runtime import checkpoint
+
+    nsga_cfg = nsga2.NSGA2Config(pop_size=cfg.pop_size,
+                                 n_generations=cfg.n_generations)
+    key = jax.random.PRNGKey(cfg.seed)
+    state = None
+    start_gen = 0
+    n_evals = 0
+    ckpt_dir = _ckpt_dir(cfg)
+    if cfg.resume and ckpt_dir:
+        step = checkpoint.latest_step(ckpt_dir)
+        if step is not None:
+            state, start_gen = checkpoint.restore(
+                ckpt_dir, step, _restore_template(problem, cfg))
+
+    if state is None:
+        state = nsga2.init_state(key, fitness, problem.n_genes, nsga_cfg,
+                                 seed_genes=_seed_genes(problem, cfg))
+        n_evals += cfg.pop_size
+
+    step_fn = jax.jit(nsga2.make_step(fitness, nsga_cfg))
+    last_saved = start_gen if start_gen else -1
+    cur_gen = start_gen
+    for gen in range(start_gen, cfg.n_generations):
+        state = step_fn(state)
+        cur_gen = gen + 1
+        n_evals += cfg.pop_size
+        if (ckpt_dir and cfg.checkpoint_every
+                and cur_gen % cfg.checkpoint_every == 0):
+            checkpoint.save(ckpt_dir, cur_gen, state)
+            last_saved = cur_gen
+    # final save, but never mislabel: only when the state really is at
+    # cur_gen and that generation wasn't already saved
+    if ckpt_dir and cfg.checkpoint_every and last_saved != cur_gen:
+        checkpoint.save(ckpt_dir, cur_gen, state)
+    return state, n_evals
+
+
+def _run_islands(problem: SearchProblem, cfg: SearchConfig):
+    """Island driver: one NSGA-II island per device, ring migration.
+
+    Generations are rounded UP to whole migration rounds (migrate_every
+    each), so the islands backend may run slightly more generations than
+    configured; `n_evaluations` reports what actually ran. Checkpointing is
+    not wired into the island loop yet — rejected explicitly below rather
+    than silently ignored."""
+    from jax.sharding import Mesh
+    from repro.core import dist
+
+    if cfg.checkpoint_every or cfg.resume:
+        raise ValueError(
+            "backend='islands' does not support checkpoint_every/resume yet; "
+            "drive repro.core.dist directly (see examples/distributed_ga.py) "
+            "or use the reference/kernel backends for checkpointed runs")
+
+    fitness = _backends.make_reference_fitness(problem)
+    devices = np.array(jax.devices())
+    n_islands = len(devices)
+    local_pop = max(8, cfg.pop_size // max(n_islands, 1))
+    island_cfg = dist.IslandConfig(
+        local_pop=local_pop,
+        migrate_every=cfg.migrate_every,
+        n_migrate=min(cfg.n_migrate, local_pop // 2),
+        nsga=nsga2.NSGA2Config(pop_size=local_pop,
+                               n_generations=cfg.n_generations),
+    )
+    n_rounds = max(1, -(-cfg.n_generations // cfg.migrate_every))
+    mesh = Mesh(devices, ("data",))
+    state = dist.run_islands(jax.random.PRNGKey(cfg.seed), fitness,
+                             problem.n_genes, mesh, island_cfg, n_rounds,
+                             seed_genes=_seed_genes(problem, cfg))
+    n_evals = n_islands * local_pop * (n_rounds * cfg.migrate_every + 1)
+    return state, n_evals
+
+
+def run_search(problem: SearchProblem, cfg: SearchConfig | None = None,
+               **overrides) -> SearchResult:
+    """One entry point for every search scenario.
+
+    `overrides` are applied on top of `cfg` (or a default SearchConfig), so
+    `run_search(problem, backend="kernel", pop_size=128)` works without
+    building a config first.
+    """
+    cfg = dataclasses.replace(cfg or SearchConfig(), **overrides)
+    if cfg.backend not in _backends.BACKENDS:
+        raise ValueError(
+            f"unknown backend {cfg.backend!r}; options: {_backends.BACKENDS}")
+
+    t0 = time.time()
+    if cfg.backend == "islands":
+        state, n_evals = _run_islands(problem, cfg)
+    else:
+        kw = {}
+        if cfg.backend == "kernel":
+            kw = dict(block_b=cfg.block_b, block_l=cfg.block_l,
+                      interpret=cfg.interpret)
+        fitness = _backends.make_fitness(problem, cfg.backend, **kw)
+        state, n_evals = _run_single(problem, cfg, fitness)
+    wall_s = time.time() - t0
+
+    objs, genes = nsga2.pareto_front(jax.device_get(state.objs),
+                                     jax.device_get(state.genes))
+    result = SearchResult(
+        state=state,
+        pareto_objs=np.asarray(objs),
+        pareto_genes=np.asarray(genes),
+        backend=cfg.backend,
+        wall_s=wall_s,
+        n_evaluations=n_evals,
+    )
+    if cfg.out_dir:
+        write_pareto_artifact(problem, result, cfg.out_dir)
+    return result
+
+
+def write_pareto_artifact(problem: SearchProblem, result: SearchResult,
+                          out_dir: str) -> str:
+    """pareto.json: objectives + genes + decoded per-comparator designs."""
+    os.makedirs(out_dir, exist_ok=True)
+    points = []
+    for o, g in zip(result.pareto_objs, result.pareto_genes):
+        bits, margin = quant.decode_genes(jnp.asarray(g))
+        points.append({
+            "acc_loss": float(o[0]),
+            "norm_area": float(o[1]),
+            "area_mm2": float(o[1] * problem.exact_area_mm2),
+            "bits": np.asarray(bits).tolist(),
+            "margin": np.asarray(margin).tolist(),
+            "genes": np.asarray(g, np.float64).round(6).tolist(),
+        })
+    payload = {
+        "backend": result.backend,
+        "wall_s": round(result.wall_s, 3),
+        "n_evaluations": result.n_evaluations,
+        "n_trees": problem.n_trees,
+        "n_comparators": problem.n_comparators,
+        "exact_accuracy": problem.exact_accuracy,
+        "exact_area_mm2": problem.exact_area_mm2,
+        "pareto": points,
+    }
+    path = os.path.join(out_dir, "pareto.json")
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(payload, f, indent=1)
+    os.replace(tmp, path)
+    return path

@@ -1,0 +1,211 @@
+"""`SearchProblem`: one evaluation context for tree *and* forest GA search.
+
+The paper's design-space search is always the same shape — NSGA-II over
+per-comparator (precision, margin) genes, each chromosome scored as
+(accuracy loss, normalized area) against an exact bespoke reference — but the
+seed repo grew three hand-rolled copies of it (single tree in `core.approx`,
+forest in `core.forest`, islands in `core.dist`). This module collapses the
+*data* side of all three into one immutable problem object (DESIGN.md §7):
+
+  - the comparator axis is the concatenation of every tree's comparators
+    (a single tree is the K=1 case), so one chromosome of 2*N_total genes
+    covers the whole ensemble exactly like `core.forest`'s joint search;
+  - the leaf axis concatenates every tree's leaves and `path` is the
+    block-diagonal "super-tree" path matrix, so leaf decode + the class-vote
+    matmul evaluate every tree in one fused tensor program — the same
+    operands the Pallas kernel consumes (`repro.kernels.tree_infer`);
+  - area bookkeeping (LUT, offsets, overheads, exact-design reference) is
+    computed once here instead of per-pipeline.
+
+Fitness *backends* over this object live in `repro.search.backends`; the
+driver loop in `repro.search.engine`.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import area as area_mod
+from repro.core import quant
+from repro.core.tree import ParallelTree, concatenate_ptrees
+from repro.datasets.synthetic import quantize_u8
+
+
+@dataclasses.dataclass
+class SearchProblem:
+    """Immutable evaluation context for one (tree-ensemble, dataset) pair.
+
+    All comparator/leaf arrays are concatenated across the K trees of the
+    ensemble (K = 1 for a single tree); `path` is block-diagonal.
+    """
+
+    feature: jnp.ndarray      # (N,) int32   concatenated comparator features
+    threshold: jnp.ndarray    # (N,) float32 trained float thresholds
+    path: jnp.ndarray         # (L, N) int8  block-diagonal super-tree paths
+    path_len: jnp.ndarray     # (L,) int32
+    n_neg: jnp.ndarray        # (L,) int32
+    leaf_class: jnp.ndarray   # (L,) int32
+    leaf_tree: jnp.ndarray    # (L,) int32   owning tree per leaf
+    x8: jnp.ndarray           # (B, F) int32 master codes (test set)
+    y: jnp.ndarray            # (B,) int32
+    area_lut: jnp.ndarray     # flat LUT (mm^2)
+    lut_offsets: jnp.ndarray  # (MAX_BITS+1,) int32
+    overhead_mm2: float
+    exact_area_mm2: float
+    exact_accuracy: float
+    n_classes: int
+    n_features: int
+    n_trees: int
+    tree_comparators: tuple   # per-tree comparator counts (static)
+    tree_leaves: tuple        # per-tree leaf counts (static)
+
+    @property
+    def n_comparators(self) -> int:
+        return int(self.feature.shape[0])
+
+    @property
+    def n_leaves(self) -> int:
+        return int(self.leaf_class.shape[0])
+
+    @property
+    def n_genes(self) -> int:
+        return 2 * self.n_comparators
+
+    def exact_genes(self) -> np.ndarray:
+        """Chromosome of the exact (8-bit, zero-margin) reference design."""
+        return quant.exact_genes(self.n_comparators)
+
+
+jax.tree_util.register_pytree_node(
+    SearchProblem,
+    lambda p: (
+        (p.feature, p.threshold, p.path, p.path_len, p.n_neg, p.leaf_class,
+         p.leaf_tree, p.x8, p.y, p.area_lut, p.lut_offsets),
+        (p.overhead_mm2, p.exact_area_mm2, p.exact_accuracy, p.n_classes,
+         p.n_features, p.n_trees, p.tree_comparators, p.tree_leaves),
+    ),
+    lambda aux, children: SearchProblem(*children, *aux),
+)
+
+
+# ---------------------------------------------------------------------------
+# reference (pure-jnp) evaluation primitives shared by backends
+# ---------------------------------------------------------------------------
+
+def decode_chromosome(problem: SearchProblem, genes):
+    """genes (..., 2N) -> (bits, substituted integer thresholds), both (..., N)."""
+    bits, margin = quant.decode_genes(genes)
+    t_int = quant.threshold_to_int(problem.threshold, bits)
+    return bits, quant.substitute(t_int, margin, bits)
+
+
+def predict_votes(problem: SearchProblem, bits, t_sub):
+    """(B,) voted class per sample — the block-diagonal super-tree dataflow.
+
+    Exactly one leaf per tree satisfies its path, so `sat @ CLS1H` counts one
+    vote per tree per class; for K=1 the votes are the predicted class's
+    one-hot and this reduces bit-exactly to single-tree leaf decode.
+    """
+    x_gathered = problem.x8[:, problem.feature]              # (B, N)
+    x_p = quant.inputs_at_precision(x_gathered, bits)
+    d = (x_p > t_sub[None, :]).astype(jnp.float32)
+    score = d @ problem.path.T.astype(jnp.float32)           # (B, L)
+    target = (problem.path_len - problem.n_neg).astype(jnp.float32)
+    sat = (score == target[None, :]).astype(jnp.float32)
+    cls1h = jax.nn.one_hot(problem.leaf_class, problem.n_classes)
+    votes = sat @ cls1h                                      # (B, C)
+    return jnp.argmax(votes, axis=1)
+
+
+def chromosome_accuracy(problem: SearchProblem, genes):
+    bits, t_sub = decode_chromosome(problem, genes)
+    pred = predict_votes(problem, bits, t_sub)
+    return jnp.mean((pred == problem.y).astype(jnp.float32))
+
+
+def chromosome_area_mm2(problem: SearchProblem, genes):
+    """Additive LUT area (the paper's GA estimator) + per-node overheads."""
+    bits, t_sub = decode_chromosome(problem, genes)
+    idx = problem.lut_offsets[bits] + t_sub
+    return problem.area_lut[idx].sum() + problem.overhead_mm2
+
+
+def objectives(problem: SearchProblem, genes):
+    """(accuracy_loss vs exact, normalized area) — both minimized."""
+    acc = chromosome_accuracy(problem, genes)
+    area = chromosome_area_mm2(problem, genes)
+    return jnp.stack([problem.exact_accuracy - acc,
+                      area / problem.exact_area_mm2])
+
+
+# ---------------------------------------------------------------------------
+# builders
+# ---------------------------------------------------------------------------
+
+def build_problem(ptrees, x_test: np.ndarray, y_test: np.ndarray,
+                  n_classes: int | None = None) -> SearchProblem:
+    """Build a SearchProblem from one or more `ParallelTree`s.
+
+    `ptrees` may be a single tree or a list (forest, joint chromosome).
+    """
+    if isinstance(ptrees, ParallelTree):
+        ptrees = [ptrees]
+    if n_classes is None:
+        n_classes = max(pt.n_classes for pt in ptrees)
+    n_features = int(x_test.shape[1])
+
+    arrays = concatenate_ptrees(ptrees)
+    feature, threshold, path = (arrays["feature"], arrays["threshold"],
+                                arrays["path"])
+    path_len, n_neg = arrays["path_len"], arrays["n_neg"]
+    leaf_class, leaf_tree = arrays["leaf_class"], arrays["leaf_tree"]
+    n_total = feature.shape[0]
+    l_total = leaf_class.shape[0]
+
+    lut, offsets = area_mod.build_area_lut()
+    x8 = quantize_u8(x_test).astype(np.int32)
+    overhead = area_mod.tree_overhead_mm2(n_total, l_total)
+
+    # exact design: 8-bit, zero margin (float64 LUT sum, like core.approx)
+    t8 = np.clip(np.floor(threshold.astype(np.float64) * 256.0), 0, 255)
+    t8 = t8.astype(np.int64)
+    exact_bits = np.full(n_total, quant.MAX_BITS, dtype=np.int64)
+    exact_area = float(lut[offsets[exact_bits] + t8].sum() + overhead)
+
+    problem = SearchProblem(
+        feature=jnp.asarray(feature),
+        threshold=jnp.asarray(threshold),
+        path=jnp.asarray(path),
+        path_len=jnp.asarray(path_len),
+        n_neg=jnp.asarray(n_neg),
+        leaf_class=jnp.asarray(leaf_class),
+        leaf_tree=jnp.asarray(leaf_tree),
+        x8=jnp.asarray(x8),
+        y=jnp.asarray(y_test.astype(np.int32)),
+        area_lut=jnp.asarray(lut),
+        lut_offsets=jnp.asarray(offsets),
+        overhead_mm2=float(overhead),
+        exact_area_mm2=exact_area,
+        exact_accuracy=0.0,  # filled below
+        n_classes=int(n_classes),
+        n_features=n_features,
+        n_trees=len(ptrees),
+        tree_comparators=tuple(pt.n_comparators for pt in ptrees),
+        tree_leaves=tuple(pt.n_leaves for pt in ptrees),
+    )
+    exact_acc = float(chromosome_accuracy(
+        problem, jnp.asarray(quant.exact_genes(n_total))))
+    return dataclasses.replace(problem, exact_accuracy=exact_acc)
+
+
+def build_tree_problem(ptree: ParallelTree, x_test, y_test) -> SearchProblem:
+    return build_problem(ptree, x_test, y_test)
+
+
+def build_forest_problem(forest, x_test, y_test) -> SearchProblem:
+    """`forest` is a `repro.core.forest.Forest`."""
+    return build_problem(list(forest.ptrees), x_test, y_test,
+                         n_classes=forest.n_classes)

@@ -1,0 +1,260 @@
+"""Unified search engine: forest parity (fused kernel vs looped vote vs
+sequential descent oracle), backend equivalence, checkpoint/resume, CLI."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.datasets import load_dataset, quantize_u8
+from repro.core import approx, forest as forest_mod, nsga2, quant
+from repro.core.train import train_tree
+from repro.core.tree import predict_descent_quantized, to_parallel
+from repro.kernels import ops
+from repro import search
+
+
+@pytest.fixture(scope="module")
+def forest_setup():
+    ds = load_dataset("seeds")
+    fr = forest_mod.train_forest(ds.x_train, ds.y_train, ds.n_classes,
+                                 n_trees=4)
+    x8 = quantize_u8(ds.x_test).astype(np.int32)
+    return ds, fr, x8
+
+
+@pytest.fixture(scope="module")
+def tree_setup():
+    ds = load_dataset("vertebral")
+    tree = train_tree(ds.x_train, ds.y_train, ds.n_classes)
+    pt = to_parallel(tree)
+    return ds, tree, pt
+
+
+def _descent_vote(fr, x8, bits_all, marg_all):
+    """Oracle #2: per-tree sequential descent + majority vote (numpy)."""
+    votes = np.zeros((x8.shape[0], fr.n_classes), np.float32)
+    off = 0
+    for tree, pt in zip(fr.trees, fr.ptrees):
+        n = pt.n_comparators
+        internal = np.flatnonzero(tree.feature >= 0)
+        bits_full = np.zeros(tree.n_nodes, np.int64)
+        marg_full = np.zeros(tree.n_nodes, np.int64)
+        bits_full[internal] = np.asarray(bits_all[off:off + n])
+        marg_full[internal] = np.asarray(marg_all[off:off + n])
+        pred = predict_descent_quantized(x8, tree, bits_full, marg_full)
+        votes[np.arange(x8.shape[0]), pred] += 1.0
+        off += n
+    return np.argmax(votes, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# forest parity: fused kernel vs looped forest_predict vs descent oracle
+# ---------------------------------------------------------------------------
+
+def test_forest_parity_three_ways(forest_setup):
+    """Fused multi-tree kernel == looped forest_predict == descent+vote,
+    bit-exact, for random per-comparator (precision, margin) genes."""
+    ds, fr, x8 = forest_setup
+    thresholds = jnp.concatenate([jnp.asarray(p.threshold) for p in fr.ptrees])
+    operands = ops.prepare_forest_operands(fr.ptrees, ds.n_features)
+    rng = np.random.default_rng(0)
+    genes = jnp.asarray(
+        rng.uniform(0, 1, (8, fr.n_genes)).astype(np.float32))
+    scale, thr = ops.decode_population(thresholds, genes)
+    preds = ops.tree_infer_predict(jnp.asarray(x8), operands, scale, thr,
+                                   interpret=True)
+    for i in range(genes.shape[0]):
+        bits, marg = quant.decode_genes(genes[i])
+        looped = forest_mod.forest_predict(fr, jnp.asarray(x8), bits, marg)
+        descent = _descent_vote(fr, x8, np.asarray(bits), np.asarray(marg))
+        np.testing.assert_array_equal(np.asarray(preds[i]), np.asarray(looped))
+        np.testing.assert_array_equal(np.asarray(preds[i]), descent)
+
+
+def test_forest_parity_leaf_blocked_kernel(forest_setup):
+    """Leaf-axis blocking (block_l) never changes the vote accumulation."""
+    ds, fr, x8 = forest_setup
+    thresholds = jnp.concatenate([jnp.asarray(p.threshold) for p in fr.ptrees])
+    operands = ops.prepare_forest_operands(fr.ptrees, ds.n_features)
+    rng = np.random.default_rng(1)
+    genes = jnp.asarray(rng.uniform(0, 1, (4, fr.n_genes)).astype(np.float32))
+    scale, thr = ops.decode_population(thresholds, genes)
+    want = ops.tree_infer_predict(jnp.asarray(x8), operands, scale, thr,
+                                  interpret=True)
+    for block_l in (128, 256):
+        got = ops.tree_infer_predict(jnp.asarray(x8), operands, scale, thr,
+                                     block_l=block_l, interpret=True)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_forest_parity_padded_edge_cases():
+    """Uneven tree sizes + tiny forests: padded comparators/leaves/classes
+    must never fire. Trees of different depths come from different-sized
+    bootstrap samples over noisy data."""
+    rng = np.random.default_rng(7)
+    x = rng.uniform(0, 1, (160, 5)).astype(np.float32)
+    y = ((x[:, 0] + 0.3 * rng.uniform(-1, 1, 160)) > 0.5).astype(np.int64)
+    for n_trees in (2, 3):
+        fr = forest_mod.train_forest(x, y, 2, n_trees=n_trees, seed=n_trees)
+        assert len({p.n_comparators for p in fr.ptrees}) >= 1
+        x8 = quantize_u8(rng.uniform(0, 1, (64, 5)).astype(np.float32))
+        x8 = x8.astype(np.int32)
+        thresholds = jnp.concatenate(
+            [jnp.asarray(p.threshold) for p in fr.ptrees])
+        operands = ops.prepare_forest_operands(fr.ptrees, 5)
+        genes = jnp.asarray(
+            rng.uniform(0, 1, (5, fr.n_genes)).astype(np.float32))
+        scale, thr = ops.decode_population(thresholds, genes)
+        preds = ops.tree_infer_predict(jnp.asarray(x8), operands, scale, thr,
+                                       interpret=True)
+        for i in range(genes.shape[0]):
+            bits, marg = quant.decode_genes(genes[i])
+            looped = forest_mod.forest_predict(fr, jnp.asarray(x8), bits, marg)
+            descent = _descent_vote(fr, x8, np.asarray(bits), np.asarray(marg))
+            np.testing.assert_array_equal(np.asarray(preds[i]),
+                                          np.asarray(looped))
+            np.testing.assert_array_equal(np.asarray(preds[i]), descent)
+
+
+def test_forest_reference_backend_matches_looped_fitness(forest_setup):
+    """SearchProblem reference fitness == the historical per-tree loop."""
+    ds, fr, x8 = forest_setup
+    prob = search.build_forest_problem(fr, ds.x_test, ds.y_test)
+    fit = search.make_fitness(prob, "reference")
+    genes = jax.random.uniform(jax.random.PRNGKey(5), (12, prob.n_genes))
+    got = np.asarray(fit(genes))
+    y = np.asarray(ds.y_test)
+    for i in range(genes.shape[0]):
+        bits, marg = quant.decode_genes(genes[i])
+        pred = np.asarray(
+            forest_mod.forest_predict(fr, jnp.asarray(x8), bits, marg))
+        acc = np.float32((pred == y).mean())
+        np.testing.assert_allclose(
+            got[i, 0], np.float32(prob.exact_accuracy) - acc, atol=1e-6)
+
+
+def test_forest_kernel_backend_bitexact_vs_reference(forest_setup):
+    ds, fr, _ = forest_setup
+    prob = search.build_forest_problem(fr, ds.x_test, ds.y_test)
+    f_ref = search.make_fitness(prob, "reference")
+    f_ker = search.make_fitness(prob, "kernel", interpret=True)
+    pop = jax.random.uniform(jax.random.PRNGKey(3), (16, prob.n_genes))
+    np.testing.assert_array_equal(np.asarray(f_ref(pop)),
+                                  np.asarray(f_ker(pop)))
+
+
+# ---------------------------------------------------------------------------
+# single-tree engine parity with the historical pipeline
+# ---------------------------------------------------------------------------
+
+def test_single_tree_objectives_match_independent_oracle(tree_setup):
+    """SearchProblem objectives vs an independently-coded leaf-decode +
+    LUT-area computation (the pre-engine core.approx formulation)."""
+    from repro.core import area as area_mod
+    from repro.core.tree import predict_quantized, ptree_to_jnp
+    ds, tree, pt = tree_setup
+    prob = search.build_tree_problem(pt, ds.x_test, ds.y_test)
+    x8 = quantize_u8(ds.x_test).astype(np.int32)
+    lut, offsets = area_mod.build_area_lut()
+    rng = np.random.default_rng(11)
+    genes = jnp.asarray(rng.uniform(0, 1, (6, prob.n_genes)).astype(np.float32))
+    fit = search.make_fitness(prob, "reference")
+    got = np.asarray(fit(genes))
+    pj = ptree_to_jnp(pt)
+    for i in range(genes.shape[0]):
+        bits, marg = quant.decode_genes(genes[i])
+        pred = predict_quantized(jnp.asarray(x8), pj, bits, marg)
+        acc = np.float32((np.asarray(pred) == ds.y_test).mean())
+        t_int = np.asarray(quant.substitute(
+            quant.threshold_to_int(jnp.asarray(pt.threshold), bits),
+            marg, bits))
+        a = lut[offsets[np.asarray(bits)] + t_int].sum() + prob.overhead_mm2
+        np.testing.assert_allclose(got[i, 0],
+                                   np.float32(prob.exact_accuracy) - acc,
+                                   atol=1e-6)
+        np.testing.assert_allclose(got[i, 1], a / prob.exact_area_mm2,
+                                   rtol=1e-6)
+
+
+def test_run_search_reference_reproduces_legacy_pipeline(tree_setup):
+    """run_search == the historical nsga2.run(make_fitness_fn) pipeline:
+    same seed, same genes, same pareto objectives."""
+    ds, tree, pt = tree_setup
+    prob = approx.build_problem(pt, ds.x_test, ds.y_test)
+    result = search.run_search(prob, backend="reference", pop_size=16,
+                               n_generations=5, seed=0)
+    fit = approx.make_fitness_fn(prob)
+    cfg = nsga2.NSGA2Config(pop_size=16, n_generations=5)
+    state = nsga2.run(jax.random.PRNGKey(0), fit, prob.n_genes, cfg,
+                      seed_genes=quant.exact_genes(pt.n_comparators))
+    objs, genes = nsga2.pareto_front(state.objs, state.genes)
+    np.testing.assert_array_equal(result.pareto_objs, np.asarray(objs))
+    np.testing.assert_array_equal(result.pareto_genes, np.asarray(genes))
+
+
+def test_run_search_kernel_backend_matches_reference(tree_setup):
+    ds, tree, pt = tree_setup
+    prob = search.build_tree_problem(pt, ds.x_test, ds.y_test)
+    r_ref = search.run_search(prob, backend="reference", pop_size=12,
+                              n_generations=3, seed=1)
+    r_ker = search.run_search(prob, backend="kernel", pop_size=12,
+                              n_generations=3, seed=1, interpret=True)
+    np.testing.assert_array_equal(r_ref.pareto_objs, r_ker.pareto_objs)
+    np.testing.assert_array_equal(r_ref.pareto_genes, r_ker.pareto_genes)
+
+
+# ---------------------------------------------------------------------------
+# engine features
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_resume_is_bitexact(tree_setup, tmp_path):
+    ds, tree, pt = tree_setup
+    prob = search.build_tree_problem(pt, ds.x_test, ds.y_test)
+    out = str(tmp_path / "run")
+    cfg = search.SearchConfig(pop_size=8, n_generations=4, out_dir=out,
+                              checkpoint_every=2)
+    full = search.run_search(prob, cfg)
+    import shutil
+    shutil.rmtree(out)
+    search.run_search(prob, cfg, n_generations=2)
+    resumed = search.run_search(prob, cfg, resume=True)
+    np.testing.assert_array_equal(np.asarray(full.state.genes),
+                                  np.asarray(resumed.state.genes))
+    np.testing.assert_array_equal(full.pareto_objs, resumed.pareto_objs)
+
+
+def test_pareto_artifact_written(tree_setup, tmp_path):
+    ds, tree, pt = tree_setup
+    prob = search.build_tree_problem(pt, ds.x_test, ds.y_test)
+    out = str(tmp_path / "artifacts")
+    search.run_search(prob, backend="reference", pop_size=8, n_generations=2,
+                      out_dir=out)
+    import json, os
+    with open(os.path.join(out, "pareto.json")) as f:
+        payload = json.load(f)
+    assert payload["backend"] == "reference"
+    assert payload["n_trees"] == 1
+    assert len(payload["pareto"]) >= 1
+    p0 = payload["pareto"][0]
+    assert len(p0["bits"]) == prob.n_comparators
+    assert all(2 <= b <= 8 for b in p0["bits"])
+
+
+def test_cli_smoke(tmp_path, capsys):
+    from repro.search.__main__ import main
+    out = str(tmp_path / "cli")
+    main(["--dataset", "seeds", "--pop", "8", "--gens", "2", "--out", out])
+    captured = capsys.readouterr().out
+    assert "pareto front" in captured
+    import os
+    assert os.path.exists(os.path.join(out, "pareto.json"))
+
+
+def test_islands_backend_runs(tree_setup):
+    """Single-device island search still produces a pareto front."""
+    ds, tree, pt = tree_setup
+    prob = search.build_tree_problem(pt, ds.x_test, ds.y_test)
+    result = search.run_search(prob, backend="islands", pop_size=16,
+                               n_generations=4)
+    assert result.pareto_objs.shape[1] == 2
+    assert len(result.pareto_objs) >= 1

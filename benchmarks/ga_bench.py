@@ -8,7 +8,13 @@ generation.
 (`core.forest.forest_predict`, one small program per tree) against the fused
 block-diagonal super-tree evaluation (`repro.search`): reference backend =
 one vote-matmul tensor program, kernel backend = ONE Pallas launch for the
-entire population x test-set x forest product. Results are also emitted as a
+entire population x test-set x forest product. The (dataset, n_trees) specs
+deliberately ladder the comparator count so the fused-vs-looped crossover
+(DESIGN.md §2) shows as a trend.
+
+`ga.dispatch_*` rows measure the host-dispatch overhead the device-resident
+generation loop (DESIGN.md §9) removes: N per-generation jitted dispatches
+vs one `nsga2.make_chunk` lax.scan. Results are also emitted as a
 BENCH_search.json artifact (see `write_artifact` / benchmarks.run).
 """
 from __future__ import annotations
@@ -94,14 +100,20 @@ def run(datasets=("har", "pendigits", "seeds"), pop=64):
     return rows
 
 
-def run_forest(datasets=("seeds", "vertebral"), n_trees=4, pop=64):
+FOREST_SPECS = (("seeds", 4), ("vertebral", 2), ("vertebral", 4))
+
+
+def run_forest(specs=FOREST_SPECS, pop=64):
     """Forest rows: looped per-tree baseline vs fused engine backends.
 
-    The fused rows evaluate the whole >=``n_trees``-tree forest population
-    with NO per-tree Python loop — `kernel` is one Pallas program (grid =
-    population x batch-blocks x leaf-blocks)."""
+    The fused rows evaluate the whole forest population with NO per-tree
+    Python loop — `kernel` is one Pallas program (grid = population x
+    batch-blocks x leaf-blocks). `specs` is (dataset, n_trees) pairs; the
+    vertebral[2] row sits between the seeds[4] and vertebral[4] comparator
+    counts so the fused-vs-looped crossover (DESIGN.md §2) is visible as a
+    trend, not a cliff."""
     rows = []
-    for name in datasets:
+    for name, n_trees in specs:
         ds = load_dataset(name)
         forest = forest_mod.train_forest(ds.x_train, ds.y_train, ds.n_classes,
                                          n_trees=n_trees)
@@ -125,12 +137,50 @@ def run_forest(datasets=("seeds", "vertebral"), n_trees=4, pop=64):
     return rows
 
 
-def write_artifact(tree_rows, forest_rows, path=ARTIFACT) -> str:
+def run_dispatch(datasets=("seeds",), pop=64, gens=20):
+    """Host-dispatch overhead rows (DESIGN.md §9): one jitted step per
+    generation (the pre-§9 driver, `gens` host round-trips) vs ONE
+    `nsga2.make_chunk` lax.scan for the whole run (a single dispatch).
+    The arithmetic is identical — the gap is pure dispatch overhead."""
+    rows = []
+    built = build_all(datasets)
+    for name, (ds, tree, pt, prob) in built.items():
+        f_ref = search.make_fitness(prob, "reference")
+        cfg = nsga2.NSGA2Config(pop_size=pop, n_generations=gens)
+        state = nsga2.init_state(jax.random.PRNGKey(0), f_ref, prob.n_genes,
+                                 cfg)
+        step = jax.jit(nsga2.make_step(f_ref, cfg))
+
+        def looped(s):
+            for _ in range(gens):
+                s = step(s)
+            return s
+
+        chunk = jax.jit(nsga2.make_chunk(f_ref, cfg, gens))
+        t_loop = _timeit(looped, state)
+        t_chunk = _timeit(chunk, state)
+        rows.append({
+            "dataset": name,
+            "pop": pop,
+            "n_generations": gens,
+            "dispatches_per_run_looped": gens,
+            "dispatches_per_run_chunked": 1,
+            "us_per_generation_looped": 1e6 * t_loop / gens,
+            "us_per_generation_chunked": 1e6 * t_chunk / gens,
+            "dispatch_overhead_us_per_generation": 1e6 * (t_loop - t_chunk) / gens,
+            "chunked_speedup": t_loop / t_chunk,
+        })
+    return rows
+
+
+def write_artifact(tree_rows, forest_rows, dispatch_rows=None,
+                   path=ARTIFACT) -> str:
     """Emit BENCH_search.json: the search-engine throughput artifact."""
     payload = {
         "backend": jax.default_backend(),
         "single_tree": tree_rows,
         "forest": forest_rows,
+        "dispatch_per_generation": dispatch_rows or [],
     }
     tmp = path + ".tmp"
     with open(tmp, "w") as f:
@@ -142,17 +192,26 @@ def write_artifact(tree_rows, forest_rows, path=ARTIFACT) -> str:
 def main(quick=False):
     tree_rows = run(datasets=("seeds",) if quick else ("har", "pendigits", "seeds"),
                     pop=32 if quick else 64)
-    forest_rows = run_forest(datasets=("seeds",) if quick else ("seeds", "vertebral"),
-                             pop=32 if quick else 64)
-    path = write_artifact(tree_rows, forest_rows)
+    forest_rows = run_forest(pop=32 if quick else 64)
+    dispatch_rows = run_dispatch(pop=32 if quick else 64,
+                                 gens=10 if quick else 20)
+    path = write_artifact(tree_rows, forest_rows, dispatch_rows)
     for r in tree_rows:
         print(f"ga.{r['dataset']}: ref={r['us_per_chromosome_ref']:.1f}us "
               f"kernel={r['us_per_chromosome_kernel']:.1f}us /chromosome")
     for r in forest_rows:
-        print(f"ga.forest_{r['dataset']}: looped={r['us_per_chromosome_looped']:.1f}us "
+        print(f"ga.forest_{r['dataset']}[{r['n_trees']}]: "
+              f"looped={r['us_per_chromosome_looped']:.1f}us "
               f"fused_ref={r['us_per_chromosome_fused_ref']:.1f}us "
               f"fused_kernel={r['us_per_chromosome_fused_kernel']:.1f}us /chromosome "
               f"(fused_ref {r['fused_ref_speedup_vs_looped']:.2f}x vs looped)")
+    for r in dispatch_rows:
+        print(f"ga.dispatch_{r['dataset']}: "
+              f"looped={r['us_per_generation_looped']:.1f}us "
+              f"chunked={r['us_per_generation_chunked']:.1f}us /generation "
+              f"({r['dispatches_per_run_looped']} -> "
+              f"{r['dispatches_per_run_chunked']} dispatches, "
+              f"{r['chunked_speedup']:.2f}x)")
     print(f"artifact: {path}")
 
 

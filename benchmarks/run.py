@@ -70,12 +70,22 @@ def main() -> None:
     # ---- forest GA: looped per-tree baseline vs fused search engine ------
     forest_rows = ga_bench.run_forest(pop=pop)
     for r in forest_rows:
-        _row(f"ga.forest_{r['dataset']}", r["us_per_chromosome_fused_ref"],
+        _row(f"ga.forest_{r['dataset']}[{r['n_trees']}]",
+             r["us_per_chromosome_fused_ref"],
              f"looped_us={r['us_per_chromosome_looped']:.1f};"
              f"fused_kernel_us={r['us_per_chromosome_fused_kernel']:.1f};"
              f"n_trees={r['n_trees']};"
              f"fused_speedup={r['fused_ref_speedup_vs_looped']:.2f}x")
-    artifact = ga_bench.write_artifact(ga_rows, forest_rows)
+
+    # ---- host-dispatch overhead: per-generation loop vs chunked scan -----
+    dispatch_rows = ga_bench.run_dispatch(pop=pop, gens=min(gens, 20))
+    for r in dispatch_rows:
+        _row(f"ga.dispatch_{r['dataset']}", r["us_per_generation_looped"],
+             f"chunked_us={r['us_per_generation_chunked']:.1f};"
+             f"dispatches={r['dispatches_per_run_looped']}->"
+             f"{r['dispatches_per_run_chunked']};"
+             f"speedup={r['chunked_speedup']:.2f}x")
+    artifact = ga_bench.write_artifact(ga_rows, forest_rows, dispatch_rows)
     _row("ga.artifact", 0.0, f"path={artifact}")
 
     # ---- kernel microbenches ---------------------------------------------

@@ -1,5 +1,7 @@
 """The paper's primary contribution: approximate bespoke Decision Trees.
 
+The bottom layer of the repo's architecture (DESIGN.md §1).
+
 - train.py  CART training (gini, expand-until-pure)
 - tree.py   flattened trees + parallel comparator-array form (TPU dataflow)
 - quant.py  precision-conversion module (paper Fig. 3b)

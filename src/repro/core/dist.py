@@ -12,6 +12,11 @@ Two levels, matching DESIGN.md §6:
    in the inner loop) and exchange elites via a `ppermute` ring every
    `migrate_every` generations. A dead pod costs search breadth, not
    correctness — the fault-tolerance story for the GA workload.
+
+Rounds are device-resident: `make_island_chunk` scans whole checkpoint
+intervals in one dispatch (DESIGN.md §9), and `island_state_sharding` gives
+the sharding pytree `runtime.checkpoint.restore` needs to re-shard a saved
+island state onto the current mesh.
 """
 from __future__ import annotations
 
@@ -82,11 +87,8 @@ def _migrate(state: nsga2.NSGA2State, axis: str, n_migrate: int,
     return nsga2.NSGA2State(genes, objs, rank, crowd, state.key, state.generation)
 
 
-def make_island_step(fitness_fn, mesh: Mesh, cfg: IslandConfig, axis: str = "data"):
-    """One migration round: `migrate_every` local generations + ring exchange.
-
-    State arrays are sharded over `axis`: genes (n_islands*local_pop, G).
-    """
+def _make_round(fitness_fn, mesh: Mesh, cfg: IslandConfig, axis: str = "data"):
+    """Unjitted one-round body shared by make_island_step / make_island_chunk."""
     pspec = P(axis)
     state_specs = nsga2.NSGA2State(
         genes=pspec, objs=pspec, rank=pspec, crowd=pspec, key=pspec,
@@ -112,7 +114,35 @@ def make_island_step(fitness_fn, mesh: Mesh, cfg: IslandConfig, axis: str = "dat
             local.key[None], local.generation,
         )
 
-    return jax.jit(_round)
+    return _round
+
+
+def make_island_step(fitness_fn, mesh: Mesh, cfg: IslandConfig, axis: str = "data"):
+    """One migration round: `migrate_every` local generations + ring exchange.
+
+    State arrays are sharded over `axis`: genes (n_islands*local_pop, G).
+    """
+    return jax.jit(_make_round(fitness_fn, mesh, cfg, axis))
+
+
+def make_island_chunk(fitness_fn, mesh: Mesh, cfg: IslandConfig, n_rounds: int,
+                      axis: str = "data"):
+    """`n_rounds` migration rounds as ONE dispatch: lax.scan over the round.
+
+    The island analogue of `nsga2.make_chunk` (DESIGN.md §9): the host
+    dispatches once per checkpoint interval instead of once per round; the
+    scan body is exactly the `make_island_step` round, so chunked and
+    per-round execution are bit-identical."""
+    if n_rounds < 1:
+        raise ValueError(f"n_rounds must be >= 1, got {n_rounds}")
+    round_fn = _make_round(fitness_fn, mesh, cfg, axis)
+
+    @jax.jit
+    def chunk(state: nsga2.NSGA2State) -> nsga2.NSGA2State:
+        return jax.lax.scan(lambda s, _: (round_fn(s), None), state, None,
+                            length=n_rounds)[0]
+
+    return chunk
 
 
 def init_islands(key, fitness_fn, n_genes: int, mesh: Mesh, cfg: IslandConfig,
@@ -148,16 +178,24 @@ def init_islands(key, fitness_fn, n_genes: int, mesh: Mesh, cfg: IslandConfig,
     )
 
 
+def island_state_sharding(mesh: Mesh, axis: str = "data") -> nsga2.NSGA2State:
+    """Sharding pytree matching an island NSGA2State (elastic restore)."""
+    shard = NamedSharding(mesh, P(axis))
+    rep = NamedSharding(mesh, P())
+    return nsga2.NSGA2State(genes=shard, objs=shard, rank=shard, crowd=shard,
+                            key=shard, generation=rep)
+
+
 def run_islands(key, fitness_fn, n_genes: int, mesh: Mesh, cfg: IslandConfig,
                 n_rounds: int, axis: str = "data",
                 state: nsga2.NSGA2State | None = None,
                 seed_genes=None) -> nsga2.NSGA2State:
+    """All `n_rounds` rounds in one device dispatch (chunked scan)."""
     if state is None:
         state = init_islands(key, fitness_fn, n_genes, mesh, cfg, axis,
                              seed_genes)
-    step = make_island_step(fitness_fn, mesh, cfg, axis)
-    for _ in range(n_rounds):
-        state = step(state)
+    if n_rounds > 0:
+        state = make_island_chunk(fitness_fn, mesh, cfg, n_rounds, axis)(state)
     return state
 
 

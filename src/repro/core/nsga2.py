@@ -4,11 +4,13 @@ Faithful to the paper's configuration: elitist (mu+lambda), binary tournament
 selection on (rank, crowding), simulated binary crossover, polynomial
 mutation, fast non-dominated sort, crowding-distance truncation.
 
-Everything is fixed-shape jnp so a whole generation is ONE compiled program:
-fitness is a vmapped batch, the domination matrix is a dense (P, P) block
-(optionally the Pallas kernel in repro.kernels.domination), fronts are peeled
-with a while_loop, and crowding uses masked sorts. Population parallelism maps
-onto the mesh in repro.core.dist.
+Everything is fixed-shape jnp so a whole generation is ONE compiled program —
+and `make_chunk` scans that program over a generation chunk so a whole
+checkpoint interval is one dispatch (DESIGN.md §9). Fitness is a vmapped
+batch; the domination matrix is a dense (P, P) block, auto-routed to the
+Pallas kernel in repro.kernels.domination above DOMINATION_KERNEL_MIN_POP;
+fronts are peeled with a while_loop; crowding uses masked sorts. Population
+parallelism maps onto the mesh in repro.core.dist.
 """
 from __future__ import annotations
 
@@ -21,6 +23,15 @@ import jax.numpy as jnp
 INF = jnp.inf
 _BIG = 1e9
 
+# Size of the array handed to `non_dominated_sort` at which it routes the
+# pairwise domination matrix through the blocked Pallas kernel
+# (repro.kernels.domination) instead of the pure-jnp broadcast. NOTE: inside
+# the GA step the sorted pool is the combined parent+offspring set (2P), so
+# the kernel engages from pop_size >= DOMINATION_KERNEL_MIN_POP / 2. The jnp
+# path stays the bit-exact oracle (the matrix is boolean, so "bit-exact" is
+# plain equality) — see DESIGN.md §9.
+DOMINATION_KERNEL_MIN_POP = 512
+
 
 def domination_matrix(objs: jnp.ndarray) -> jnp.ndarray:
     """objs (P, M), minimized. out[i, j] = True iff i dominates j."""
@@ -29,10 +40,32 @@ def domination_matrix(objs: jnp.ndarray) -> jnp.ndarray:
     return jnp.all(a <= b, axis=-1) & jnp.any(a < b, axis=-1)
 
 
+def _kernel_domination_available() -> bool:
+    """Auto-routing engages only on a real TPU. Off-TPU the kernel runs in
+    the Pallas interpreter — a bit-exact correctness fallback for explicit
+    use (cfg.domination_fn), never a win to route to automatically."""
+    return jax.default_backend() == "tpu"
+
+
+def _dispatch_domination(objs: jnp.ndarray) -> jnp.ndarray:
+    """Pure-jnp domination below DOMINATION_KERNEL_MIN_POP, Pallas above.
+
+    The population axis is static under jit, so the routing resolves at trace
+    time — no runtime branching inside the compiled program."""
+    if (objs.shape[0] >= DOMINATION_KERNEL_MIN_POP
+            and _kernel_domination_available()):
+        try:
+            from repro.kernels import ops as _kops
+        except ImportError:  # kernels package unavailable: oracle path
+            return domination_matrix(objs)
+        return _kops.domination_matrix_bool(objs)
+    return domination_matrix(objs)
+
+
 def non_dominated_sort(objs: jnp.ndarray, dom: jnp.ndarray | None = None) -> jnp.ndarray:
     """Returns integer rank per individual (0 = first/pareto front)."""
     if dom is None:
-        dom = domination_matrix(objs)
+        dom = _dispatch_domination(objs)
     p = objs.shape[0]
     n_dominators = dom.sum(axis=0).astype(jnp.int32)  # how many dominate j
 
@@ -167,7 +200,7 @@ def init_state(key, fitness_fn, n_genes: int, cfg: NSGA2Config,
         jitter = jitter.at[:k].set(0.0)  # keep pristine seeds
         genes = genes.at[:n_seed].set(jnp.clip(reps + jitter, 0.0, 1.0))
     objs = fitness_fn(genes)
-    dom_fn = cfg.domination_fn or domination_matrix
+    dom_fn = cfg.domination_fn or _dispatch_domination
     rank = non_dominated_sort(objs, dom_fn(objs))
     crowd = crowding_distance(objs, rank)
     return NSGA2State(genes, objs, rank, crowd, kloop, jnp.int32(0))
@@ -175,7 +208,7 @@ def init_state(key, fitness_fn, n_genes: int, cfg: NSGA2Config,
 
 def make_step(fitness_fn, cfg: NSGA2Config):
     """One (mu+lambda) generation, jittable."""
-    dom_fn = cfg.domination_fn or domination_matrix
+    dom_fn = cfg.domination_fn or _dispatch_domination
 
     def step(state: NSGA2State) -> NSGA2State:
         p, g = state.genes.shape
@@ -202,6 +235,26 @@ def make_step(fitness_fn, cfg: NSGA2Config):
         )
 
     return step
+
+
+def make_chunk(fitness_fn, cfg: NSGA2Config, chunk_len: int):
+    """`chunk_len` generations as ONE device program: lax.scan over make_step.
+
+    The device-resident generation loop (DESIGN.md §9): instead of the host
+    dispatching one jitted step per generation (a host round-trip each), a
+    whole chunk — typically one checkpoint interval — is a single dispatch
+    and a single device->host transfer. The scan body is exactly `make_step`,
+    so a chunked run is bit-identical to the per-generation loop (tests
+    enforce this)."""
+    if chunk_len < 1:
+        raise ValueError(f"chunk_len must be >= 1, got {chunk_len}")
+    step = make_step(fitness_fn, cfg)
+
+    def chunk(state: NSGA2State) -> NSGA2State:
+        return jax.lax.scan(lambda s, _: (step(s), None), state, None,
+                            length=chunk_len)[0]
+
+    return chunk
 
 
 def run(key, fitness_fn, n_genes: int, cfg: NSGA2Config,

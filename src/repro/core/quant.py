@@ -1,4 +1,4 @@
-"""Threshold precision-conversion module (paper Fig. 3b), bit-exact.
+"""Threshold precision-conversion module (paper Fig. 3b; DESIGN.md §3).
 
 Semantics (all integer, derived from the [0,1]-normalized reals):
 

@@ -8,6 +8,14 @@ the (small, static) objective count unrolled.
 
 Output is f32 {0., 1.} — downstream reductions (domination counts) are sums,
 and f32 keeps the 8x128 VPU lanes dense.
+
+Wired into the sort path: on TPU, `core.nsga2.non_dominated_sort` routes
+through this kernel (via `kernels.ops.domination_matrix_bool`, which pads
+internally) whenever the sorted pool reaches
+`nsga2.DOMINATION_KERNEL_MIN_POP`; below that — and everywhere off-TPU,
+where this kernel only runs in the (slow, bit-exact) Pallas interpreter —
+the pure-jnp broadcast, the kernel's oracle, is the right call
+(DESIGN.md §9).
 """
 from __future__ import annotations
 

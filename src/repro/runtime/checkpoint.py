@@ -40,7 +40,12 @@ def _path_str(p) -> str:
     return str(p)
 
 
-def save(ckpt_dir: str, step: int, tree, keep: int = 3) -> str:
+def save(ckpt_dir: str, step: int, tree, keep: int = 3,
+         meta: dict | None = None) -> str:
+    """`meta`: optional JSON-serializable producer metadata stored in the
+    manifest (e.g. the search engine records its backend family so a resume
+    with an incompatible state layout fails with a clear error instead of a
+    shape assertion — see repro.search.engine)."""
     os.makedirs(ckpt_dir, exist_ok=True)
     leaves, _ = _flatten_with_paths(tree)
     arrays = {k: np.asarray(jax.device_get(v)) for k, v in leaves.items()}
@@ -50,6 +55,7 @@ def save(ckpt_dir: str, step: int, tree, keep: int = 3) -> str:
         "shapes": {k: list(v.shape) for k, v in arrays.items()},
         "dtypes": {k: str(v.dtype) for k, v in arrays.items()},
         "shards": "full",
+        "meta": meta or {},
     }
     final = os.path.join(ckpt_dir, f"ckpt_{step:08d}")
     with tempfile.TemporaryDirectory(dir=ckpt_dir) as tmp:
@@ -62,6 +68,13 @@ def save(ckpt_dir: str, step: int, tree, keep: int = 3) -> str:
     os.replace(final + ".tmp", final)  # atomic publish
     _gc(ckpt_dir, keep)
     return final
+
+
+def read_manifest(ckpt_dir: str, step: int) -> dict:
+    """The JSON manifest of one checkpoint (includes the `meta` dict)."""
+    path = os.path.join(ckpt_dir, f"ckpt_{step:08d}", "manifest.json")
+    with open(path) as f:
+        return json.load(f)
 
 
 def latest_step(ckpt_dir: str) -> int | None:

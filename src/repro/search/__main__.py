@@ -8,7 +8,9 @@ Trains the exact bespoke tree (or a bootstrap forest with --trees K), runs
 the NSGA-II dual-approximation search on the selected backend, prints the
 pareto front and the best design under the 1% accuracy-loss budget, and —
 with --out — writes pareto.json plus (single-tree only) the bespoke Verilog
-of the selected design.
+of the selected design. `--checkpoint-every N --resume` gives kill-safe
+long runs on every backend (islands included); see the README's CLI
+reference for the flag-by-flag walkthrough.
 """
 from __future__ import annotations
 
@@ -37,8 +39,18 @@ def main(argv=None) -> None:
     ap.add_argument("--gens", type=int, default=40)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default=None, help="artifact directory")
-    ap.add_argument("--checkpoint-every", type=int, default=0)
-    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--checkpoint-every", type=int, default=0,
+                    help="generations between checkpoint saves (0 = off); "
+                         "also the lax.scan chunk length, so one interval = "
+                         "one device dispatch")
+    ap.add_argument("--resume", action="store_true",
+                    help="continue from the latest checkpoint under "
+                         "OUT/ckpt (all backends, islands included)")
+    ap.add_argument("--migrate-every", type=int, default=5,
+                    help="islands backend: generations between ring "
+                         "migrations (checkpoints land on round boundaries)")
+    ap.add_argument("--n-migrate", type=int, default=4,
+                    help="islands backend: elites migrated per round")
     ap.add_argument("--max-loss", type=float, default=0.01)
     args = ap.parse_args(argv)
 
@@ -63,13 +75,15 @@ def main(argv=None) -> None:
         backend=args.backend, pop_size=args.pop, n_generations=args.gens,
         seed=args.seed, out_dir=args.out,
         checkpoint_every=args.checkpoint_every, resume=args.resume,
+        migrate_every=args.migrate_every, n_migrate=args.n_migrate,
     )
     print(f"== run_search backend={cfg.backend} pop={cfg.pop_size} "
           f"gens={cfg.n_generations} ==")
     result = search.run_search(problem, cfg)
 
     print(f"search wall time: {result.wall_s:.1f}s "
-          f"({result.n_evaluations} chromosome evaluations)")
+          f"({result.n_evaluations} chromosome evaluations, "
+          f"{result.n_dispatches} device dispatches)")
     print("pareto front (acc_loss, normalized area):")
     for o in result.pareto_objs:
         print(f"  {o[0]:+.4f}  {o[1]:.3f}  ({1 / max(o[1], 1e-9):.2f}x smaller)")

@@ -13,8 +13,9 @@ with each other:
               the K-iteration per-tree Python loop of the old forest path.
   islands   — not a fitness function but a *driver* strategy (per-device
               NSGA-II islands with ring migration, `core.dist`); it reuses
-              the reference fitness per island and is selected through
-              `repro.search.engine.run_search`.
+              the reference fitness per island, is selected through
+              `repro.search.engine.run_search`, and shares the engine's
+              chunked-scan checkpoint/resume machinery (DESIGN.md §9).
 
 The accuracy term of `reference` and `kernel` agree bit-exactly: every
 integer quantity is exact in f32 (< 2^24) and vote accumulation adds small

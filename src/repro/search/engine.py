@@ -11,9 +11,15 @@ Features over the old loops:
   - backend selection: `reference` (pure jnp), `kernel` (fused Pallas,
     one launch per generation for the whole population x test-set x forest
     product), `islands` (per-device NSGA-II + ring migration via core.dist);
+  - device-resident generation loop (DESIGN.md §9): generations run as
+    lax.scan chunks of `checkpoint_every` (or the whole run when
+    checkpointing is off), so a checkpoint interval costs exactly one host
+    dispatch and one device->host transfer — `SearchResult.n_dispatches`
+    reports the count;
   - checkpointable state: `checkpoint_every` saves the full NSGA2State
     through `repro.runtime.checkpoint` (atomic, retained-K) and
-    `resume=True` continues from the latest checkpoint;
+    `resume=True` continues from the latest checkpoint — for the islands
+    backend too, whose gathered state round-trips through the same path;
   - pareto-front artifacts: `out_dir` receives pareto.json (objectives,
     genes, decoded per-comparator designs) for downstream RTL emission.
 """
@@ -45,7 +51,7 @@ class SearchConfig:
     block_l: int | None = None
     interpret: bool | None = None   # None = auto (interpret off TPU)
     # islands backend (generations round UP to whole migration rounds;
-    # checkpoint_every/resume are not supported and raise)
+    # checkpoints land on round boundaries)
     migrate_every: int = 5
     n_migrate: int = 4
     # artifacts / checkpointing
@@ -62,6 +68,7 @@ class SearchResult:
     backend: str
     wall_s: float
     n_evaluations: int
+    n_dispatches: int = 0      # generation-loop device dispatches this call
 
     def best_under_loss(self, max_loss: float = 0.01):
         """Smallest-area pareto point within an accuracy-loss budget."""
@@ -81,6 +88,81 @@ def _seed_genes(problem: SearchProblem, cfg: SearchConfig):
     return problem.exact_genes() if cfg.seed_exact else None
 
 
+def _chunk_schedule(start: int, stop: int, every: int) -> list[int]:
+    """Chunk lengths covering [start, stop) with boundaries at multiples of
+    `every` (every=0 -> one chunk for the whole remaining run). A resume from
+    an off-boundary final save realigns at the next multiple, so checkpoints
+    always land on the same cadence regardless of interruptions."""
+    if every < 0:
+        raise ValueError(f"checkpoint_every must be >= 0, got {every}")
+    if start >= stop:
+        return []
+    if not every:
+        return [stop - start]
+    out = []
+    g = start
+    while g < stop:
+        nxt = min(stop, (g // every + 1) * every)
+        out.append(nxt - g)
+        g = nxt
+    return out
+
+
+def _drive_chunks(state, start: int, stop: int, every: int, make_chunk_fn,
+                  save_fn=None):
+    """The chunked-scan driver shared by the single and islands families.
+
+    Runs positions [start, stop) as lax.scan chunks with boundaries at
+    multiples of `every`, compiling one chunk program per distinct length
+    (at most three: realignment after an off-boundary resume, the
+    steady-state `every`-long chunk, and a shorter tail). `save_fn`
+    is called at every boundary and — unless that position was just saved —
+    once at the end, so a partial run always leaves its final state on disk
+    without ever mislabeling a step. Returns (state, position, n_chunks)."""
+    chunk_fns = {}
+    cur = start
+    last_saved = start if start else -1
+    n_chunks = 0
+    for length in _chunk_schedule(start, stop, every):
+        fn = chunk_fns.get(length)
+        if fn is None:
+            fn = chunk_fns[length] = make_chunk_fn(length)
+        state = fn(state)
+        cur += length
+        n_chunks += 1
+        if save_fn and every and cur % every == 0:
+            save_fn(cur, state)
+            last_saved = cur
+    if save_fn and last_saved != cur:
+        save_fn(cur, state)
+    return state, cur, n_chunks
+
+
+def _validate_resume_meta(ckpt_dir: str, step: int, family: str,
+                          cfg: SearchConfig) -> dict:
+    """Refuse to restore a state whose layout can't match this run.
+
+    Returns the manifest's meta dict ({} for pre-meta checkpoints, which
+    fall through to checkpoint.restore's shape asserts)."""
+    from repro.runtime import checkpoint
+
+    meta = checkpoint.read_manifest(ckpt_dir, step).get("meta", {})
+    if not meta:
+        return meta
+    saved = meta.get("family")
+    if saved != family:
+        raise ValueError(
+            f"checkpoint at {ckpt_dir} step {step} was written by the "
+            f"{saved!r} driver; cannot resume it with backend={cfg.backend!r} "
+            f"({family!r} state layout)")
+    if meta.get("pop_size", cfg.pop_size) != cfg.pop_size:
+        raise ValueError(
+            f"checkpoint at {ckpt_dir} step {step} was written with "
+            f"pop_size={meta['pop_size']}; cannot resume with "
+            f"pop_size={cfg.pop_size}")
+    return meta
+
+
 def _restore_template(problem: SearchProblem, cfg: SearchConfig):
     """NSGA2State skeleton for checkpoint.restore — shapes/dtypes only, no
     fitness evaluation (init_state would run a full population eval just to
@@ -97,9 +179,12 @@ def _restore_template(problem: SearchProblem, cfg: SearchConfig):
 
 
 def _run_single(problem: SearchProblem, cfg: SearchConfig, fitness):
-    """reference/kernel driver with optional checkpoint/resume.
+    """reference/kernel driver: chunked-scan generations + checkpoint/resume.
 
-    Returns (state, n_evaluations actually run in THIS call)."""
+    Returns (state, n_evaluations, n_dispatches) for THIS call. Generations
+    execute as `nsga2.make_chunk` programs of `checkpoint_every` length
+    (falling back to the full run), so the host dispatches once per
+    checkpoint interval — bit-exact vs the historical per-generation loop."""
     from repro.runtime import checkpoint
 
     nsga_cfg = nsga2.NSGA2Config(pop_size=cfg.pop_size,
@@ -108,10 +193,14 @@ def _run_single(problem: SearchProblem, cfg: SearchConfig, fitness):
     state = None
     start_gen = 0
     n_evals = 0
+    n_dispatches = 0
     ckpt_dir = _ckpt_dir(cfg)
+    meta = {"family": "single", "backend": cfg.backend,
+            "pop_size": cfg.pop_size}
     if cfg.resume and ckpt_dir:
         step = checkpoint.latest_step(ckpt_dir)
         if step is not None:
+            _validate_resume_meta(ckpt_dir, step, "single", cfg)
             state, start_gen = checkpoint.restore(
                 ckpt_dir, step, _restore_template(problem, cfg))
 
@@ -119,23 +208,33 @@ def _run_single(problem: SearchProblem, cfg: SearchConfig, fitness):
         state = nsga2.init_state(key, fitness, problem.n_genes, nsga_cfg,
                                  seed_genes=_seed_genes(problem, cfg))
         n_evals += cfg.pop_size
+        n_dispatches += 1
 
-    step_fn = jax.jit(nsga2.make_step(fitness, nsga_cfg))
-    last_saved = start_gen if start_gen else -1
-    cur_gen = start_gen
-    for gen in range(start_gen, cfg.n_generations):
-        state = step_fn(state)
-        cur_gen = gen + 1
-        n_evals += cfg.pop_size
-        if (ckpt_dir and cfg.checkpoint_every
-                and cur_gen % cfg.checkpoint_every == 0):
-            checkpoint.save(ckpt_dir, cur_gen, state)
-            last_saved = cur_gen
-    # final save, but never mislabel: only when the state really is at
-    # cur_gen and that generation wasn't already saved
-    if ckpt_dir and cfg.checkpoint_every and last_saved != cur_gen:
-        checkpoint.save(ckpt_dir, cur_gen, state)
-    return state, n_evals
+    # no out_dir -> nothing to save, so don't let checkpoint_every shrink
+    # the chunks (the whole run stays one dispatch)
+    saving = bool(ckpt_dir and cfg.checkpoint_every)
+    state, cur_gen, n_chunks = _drive_chunks(
+        state, start_gen, cfg.n_generations,
+        cfg.checkpoint_every if saving else 0,
+        lambda n: jax.jit(nsga2.make_chunk(fitness, nsga_cfg, n)),
+        (lambda gen, s: checkpoint.save(ckpt_dir, gen, s, meta=meta))
+        if saving else None)
+    n_evals += cfg.pop_size * (cur_gen - start_gen)
+    n_dispatches += n_chunks
+    return state, n_evals, n_dispatches
+
+
+def _islands_template(problem: SearchProblem, n_islands: int, local_pop: int):
+    """Island NSGA2State skeleton (key axis = islands) for checkpoint.restore."""
+    p = n_islands * local_pop
+    return nsga2.NSGA2State(
+        genes=jnp.zeros((p, problem.n_genes), jnp.float32),
+        objs=jnp.zeros((p, 2), jnp.float32),
+        rank=jnp.zeros((p,), jnp.int32),
+        crowd=jnp.zeros((p,), jnp.float32),
+        key=jnp.zeros((n_islands, 2), jnp.uint32),
+        generation=jnp.int32(0),
+    )
 
 
 def _run_islands(problem: SearchProblem, cfg: SearchConfig):
@@ -143,17 +242,15 @@ def _run_islands(problem: SearchProblem, cfg: SearchConfig):
 
     Generations are rounded UP to whole migration rounds (migrate_every
     each), so the islands backend may run slightly more generations than
-    configured; `n_evaluations` reports what actually ran. Checkpointing is
-    not wired into the island loop yet — rejected explicitly below rather
-    than silently ignored."""
+    configured; `n_evaluations` reports what actually ran. Rounds execute as
+    `dist.make_island_chunk` scans sized to the checkpoint cadence
+    (DESIGN.md §9): checkpoints land on round boundaries, every
+    ceil(checkpoint_every / migrate_every) rounds, labeled in generations;
+    `resume=True` restores the gathered island state through
+    `runtime.checkpoint` and re-shards it onto the current mesh."""
     from jax.sharding import Mesh
     from repro.core import dist
-
-    if cfg.checkpoint_every or cfg.resume:
-        raise ValueError(
-            "backend='islands' does not support checkpoint_every/resume yet; "
-            "drive repro.core.dist directly (see examples/distributed_ga.py) "
-            "or use the reference/kernel backends for checkpointed runs")
+    from repro.runtime import checkpoint
 
     fitness = _backends.make_reference_fitness(problem)
     devices = np.array(jax.devices())
@@ -167,12 +264,57 @@ def _run_islands(problem: SearchProblem, cfg: SearchConfig):
                                n_generations=cfg.n_generations),
     )
     n_rounds = max(1, -(-cfg.n_generations // cfg.migrate_every))
+    ckpt_rounds = (max(1, -(-cfg.checkpoint_every // cfg.migrate_every))
+                   if cfg.checkpoint_every else 0)
     mesh = Mesh(devices, ("data",))
-    state = dist.run_islands(jax.random.PRNGKey(cfg.seed), fitness,
-                             problem.n_genes, mesh, island_cfg, n_rounds,
-                             seed_genes=_seed_genes(problem, cfg))
-    n_evals = n_islands * local_pop * (n_rounds * cfg.migrate_every + 1)
-    return state, n_evals
+
+    state = None
+    start_round = 0
+    n_evals = 0
+    n_dispatches = 0
+    ckpt_dir = _ckpt_dir(cfg)
+    meta = {"family": "islands", "backend": cfg.backend,
+            "pop_size": cfg.pop_size, "local_pop": local_pop,
+            "n_islands": n_islands, "migrate_every": cfg.migrate_every}
+    if cfg.resume and ckpt_dir:
+        step = checkpoint.latest_step(ckpt_dir)
+        if step is not None:
+            saved_meta = _validate_resume_meta(ckpt_dir, step, "islands", cfg)
+            if saved_meta.get("migrate_every", cfg.migrate_every) != cfg.migrate_every:
+                raise ValueError(
+                    f"islands checkpoint at step {step} was written with "
+                    f"migrate_every={saved_meta['migrate_every']}; resuming "
+                    f"with migrate_every={cfg.migrate_every} would shift the "
+                    f"round grid")
+            if saved_meta.get("n_islands", n_islands) != n_islands:
+                raise ValueError(
+                    f"islands checkpoint at step {step} was written on "
+                    f"{saved_meta['n_islands']} islands; this host has "
+                    f"{n_islands} devices (per-island populations would not "
+                    f"line up)")
+            state, gens_done = checkpoint.restore(
+                ckpt_dir, step, _islands_template(problem, n_islands, local_pop),
+                shardings=dist.island_state_sharding(mesh))
+            start_round = gens_done // cfg.migrate_every
+
+    if state is None:
+        state = dist.init_islands(jax.random.PRNGKey(cfg.seed), fitness,
+                                  problem.n_genes, mesh, island_cfg,
+                                  seed_genes=_seed_genes(problem, cfg))
+        n_evals += n_islands * local_pop
+        n_dispatches += 1
+
+    saving = bool(ckpt_dir and ckpt_rounds)
+    state, cur_round, n_chunks = _drive_chunks(
+        state, start_round, n_rounds, ckpt_rounds if saving else 0,
+        lambda n: dist.make_island_chunk(fitness, mesh, island_cfg, n),
+        (lambda rnd, s: checkpoint.save(
+            ckpt_dir, rnd * cfg.migrate_every, s, meta=meta))
+        if saving else None)
+    n_evals += (n_islands * local_pop
+                * (cur_round - start_round) * cfg.migrate_every)
+    n_dispatches += n_chunks
+    return state, n_evals, n_dispatches
 
 
 def run_search(problem: SearchProblem, cfg: SearchConfig | None = None,
@@ -187,17 +329,20 @@ def run_search(problem: SearchProblem, cfg: SearchConfig | None = None,
     if cfg.backend not in _backends.BACKENDS:
         raise ValueError(
             f"unknown backend {cfg.backend!r}; options: {_backends.BACKENDS}")
+    if cfg.checkpoint_every < 0:
+        raise ValueError(
+            f"checkpoint_every must be >= 0, got {cfg.checkpoint_every}")
 
     t0 = time.time()
     if cfg.backend == "islands":
-        state, n_evals = _run_islands(problem, cfg)
+        state, n_evals, n_dispatches = _run_islands(problem, cfg)
     else:
         kw = {}
         if cfg.backend == "kernel":
             kw = dict(block_b=cfg.block_b, block_l=cfg.block_l,
                       interpret=cfg.interpret)
         fitness = _backends.make_fitness(problem, cfg.backend, **kw)
-        state, n_evals = _run_single(problem, cfg, fitness)
+        state, n_evals, n_dispatches = _run_single(problem, cfg, fitness)
     wall_s = time.time() - t0
 
     objs, genes = nsga2.pareto_front(jax.device_get(state.objs),
@@ -209,6 +354,7 @@ def run_search(problem: SearchProblem, cfg: SearchConfig | None = None,
         backend=cfg.backend,
         wall_s=wall_s,
         n_evaluations=n_evals,
+        n_dispatches=n_dispatches,
     )
     if cfg.out_dir:
         write_pareto_artifact(problem, result, cfg.out_dir)
@@ -234,6 +380,7 @@ def write_pareto_artifact(problem: SearchProblem, result: SearchResult,
         "backend": result.backend,
         "wall_s": round(result.wall_s, 3),
         "n_evaluations": result.n_evaluations,
+        "n_dispatches": result.n_dispatches,
         "n_trees": problem.n_trees,
         "n_comparators": problem.n_comparators,
         "exact_accuracy": problem.exact_accuracy,

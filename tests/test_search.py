@@ -258,3 +258,134 @@ def test_islands_backend_runs(tree_setup):
                                n_generations=4)
     assert result.pareto_objs.shape[1] == 2
     assert len(result.pareto_objs) >= 1
+
+
+# ---------------------------------------------------------------------------
+# device-resident generation loop (DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+def test_chunked_scan_equals_per_generation_loop(tree_setup):
+    """run_search (chunked lax.scan, any chunking) == the per-generation
+    host loop, bit-for-bit: same seed, same final population."""
+    ds, tree, pt = tree_setup
+    prob = search.build_tree_problem(pt, ds.x_test, ds.y_test)
+    fit = search.make_fitness(prob, "reference")
+    cfg = nsga2.NSGA2Config(pop_size=10, n_generations=7)
+    state = nsga2.init_state(jax.random.PRNGKey(0), fit, prob.n_genes, cfg,
+                             seed_genes=prob.exact_genes())
+    step = jax.jit(nsga2.make_step(fit, cfg))
+    for _ in range(7):
+        state = step(state)
+
+    whole = search.run_search(prob, backend="reference", pop_size=10,
+                              n_generations=7, seed=0)
+    np.testing.assert_array_equal(np.asarray(state.genes),
+                                  np.asarray(whole.state.genes))
+    np.testing.assert_array_equal(np.asarray(state.objs),
+                                  np.asarray(whole.state.objs))
+    assert whole.n_dispatches == 2  # init + ONE scan for all 7 generations
+
+    # checkpoint chunking (3+3+1) must not change the arithmetic either
+    import tempfile
+    with tempfile.TemporaryDirectory() as out:
+        chunked = search.run_search(prob, backend="reference", pop_size=10,
+                                    n_generations=7, seed=0, out_dir=out,
+                                    checkpoint_every=3)
+    np.testing.assert_array_equal(np.asarray(state.genes),
+                                  np.asarray(chunked.state.genes))
+    assert chunked.n_dispatches == 4  # init + chunks of 3, 3, 1
+
+
+def test_resume_from_off_boundary_save_realigns(tree_setup, tmp_path):
+    """Kill after an off-boundary final save: resume restores mid-interval,
+    realigns at the next checkpoint_every multiple, and the end state is
+    bit-identical to the uninterrupted run."""
+    ds, tree, pt = tree_setup
+    prob = search.build_tree_problem(pt, ds.x_test, ds.y_test)
+    out = str(tmp_path / "run")
+    cfg = search.SearchConfig(pop_size=8, n_generations=7, out_dir=out,
+                              checkpoint_every=3)
+    full = search.run_search(prob, cfg)
+    import shutil
+    shutil.rmtree(out)
+    # "killed" at generation 4: saves land at 3 (boundary) and 4 (final)
+    search.run_search(prob, cfg, n_generations=4)
+    from repro.runtime import checkpoint
+    assert checkpoint.latest_step(out + "/ckpt") == 4
+    resumed = search.run_search(prob, cfg, resume=True)
+    np.testing.assert_array_equal(np.asarray(full.state.genes),
+                                  np.asarray(resumed.state.genes))
+    np.testing.assert_array_equal(full.pareto_objs, resumed.pareto_objs)
+
+
+def test_islands_checkpoint_resume_roundtrip(tree_setup, tmp_path):
+    """Islands state round-trips through runtime.checkpoint: a run killed
+    mid-way and resumed ends bit-identical to the uninterrupted run."""
+    ds, tree, pt = tree_setup
+    prob = search.build_tree_problem(pt, ds.x_test, ds.y_test)
+    out = str(tmp_path / "islands")
+    cfg = search.SearchConfig(backend="islands", pop_size=16,
+                              n_generations=6, migrate_every=2,
+                              checkpoint_every=2, out_dir=out, seed=3)
+    full = search.run_search(prob, cfg)
+    import shutil
+    shutil.rmtree(out)
+    partial = search.run_search(prob, cfg, n_generations=2)
+    assert partial.n_dispatches >= 2
+    resumed = search.run_search(prob, cfg, resume=True)
+    np.testing.assert_array_equal(np.asarray(full.state.genes),
+                                  np.asarray(resumed.state.genes))
+    np.testing.assert_array_equal(np.asarray(full.state.objs),
+                                  np.asarray(resumed.state.objs))
+    np.testing.assert_array_equal(full.pareto_objs, resumed.pareto_objs)
+
+
+def test_resume_rejects_mismatched_driver_family(tree_setup, tmp_path):
+    """An islands checkpoint must not silently restore into the single-state
+    engine (and vice versa) — the manifest meta makes it a clear error."""
+    ds, tree, pt = tree_setup
+    prob = search.build_tree_problem(pt, ds.x_test, ds.y_test)
+    out = str(tmp_path / "family")
+    search.run_search(prob, backend="islands", pop_size=16, n_generations=2,
+                      migrate_every=2, checkpoint_every=2, out_dir=out)
+    with pytest.raises(ValueError, match="islands"):
+        search.run_search(prob, backend="reference", pop_size=16,
+                          n_generations=4, checkpoint_every=2, out_dir=out,
+                          resume=True)
+
+
+def test_checkpoint_every_without_out_dir_stays_single_dispatch(tree_setup):
+    """With nowhere to save, checkpoint_every must not shrink the chunks."""
+    ds, tree, pt = tree_setup
+    prob = search.build_tree_problem(pt, ds.x_test, ds.y_test)
+    r = search.run_search(prob, backend="reference", pop_size=8,
+                          n_generations=6, checkpoint_every=2)
+    assert r.n_dispatches == 2  # init + ONE scan for all 6 generations
+
+
+def test_chunk_schedule_rejects_negative_interval():
+    from repro.search.engine import _chunk_schedule
+    with pytest.raises(ValueError, match="checkpoint_every"):
+        _chunk_schedule(0, 5, -1)
+
+
+def test_resume_rejects_pop_size_mismatch(tree_setup, tmp_path):
+    """A clear error, not a shape assert, when the population changed."""
+    ds, tree, pt = tree_setup
+    prob = search.build_tree_problem(pt, ds.x_test, ds.y_test)
+    out = str(tmp_path / "pop")
+    search.run_search(prob, backend="reference", pop_size=8, n_generations=2,
+                      checkpoint_every=2, out_dir=out)
+    with pytest.raises(ValueError, match="pop_size"):
+        search.run_search(prob, backend="reference", pop_size=16,
+                          n_generations=4, checkpoint_every=2, out_dir=out,
+                          resume=True)
+
+
+def test_negative_checkpoint_every_rejected_all_backends(tree_setup):
+    ds, tree, pt = tree_setup
+    prob = search.build_tree_problem(pt, ds.x_test, ds.y_test)
+    for backend in ("reference", "islands"):
+        with pytest.raises(ValueError, match="checkpoint_every"):
+            search.run_search(prob, backend=backend, pop_size=8,
+                              n_generations=2, checkpoint_every=-3)

@@ -1,0 +1,110 @@
+#!/usr/bin/env python
+"""Docs-consistency check: DESIGN.md section citations must resolve.
+
+Module docstrings (and comments) cite architecture notes as ``DESIGN.md §N``.
+Those section numbers are load-bearing — DESIGN.md promises they are stable —
+so this check enforces, without importing any repo code:
+
+  1. every ``DESIGN.md §N`` citation in a tracked .py file resolves to an
+     existing ``## §N`` section of DESIGN.md         -> hard error (exit 1);
+  2. every DESIGN.md section is cited by at least one module
+     -> flagged; a warning by default, an error with --strict.
+
+Run from the repo root (CI does):  python tools/check_design_refs.py
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SCAN_DIRS = ("src", "tests", "benchmarks", "examples", "tools")
+SECTION_RE = re.compile(r"^##\s*§(\d+)\s+(.*)$", re.MULTILINE)
+# one DESIGN.md citation may name several sections ("DESIGN.md §7, §9")
+CITE_RE = re.compile(r"DESIGN\.md\s*((?:§\d+[,/ ]*(?:and\s+)?)+)")
+SECNUM_RE = re.compile(r"§(\d+)")
+
+
+def design_sections(design_path: str) -> tuple[dict[int, str], list[int]]:
+    """(sections, duplicated numbers). Duplicates break the 'section numbers
+    are stable' promise — citations to them are ambiguous."""
+    with open(design_path, encoding="utf-8") as f:
+        text = f.read()
+    sections: dict[int, str] = {}
+    dups = []
+    for m in SECTION_RE.finditer(text):
+        num = int(m.group(1))
+        if num in sections:
+            dups.append(num)
+        sections[num] = m.group(2).strip()
+    return sections, dups
+
+
+def iter_py_files():
+    for base in SCAN_DIRS:
+        root = os.path.join(REPO, base)
+        if not os.path.isdir(root):
+            continue
+        for dirpath, dirnames, filenames in os.walk(root):
+            dirnames[:] = [d for d in dirnames if d != "__pycache__"]
+            for name in sorted(filenames):
+                if name.endswith(".py"):
+                    yield os.path.join(dirpath, name)
+
+
+def collect_citations():
+    """{section -> [(relpath, lineno), ...]}"""
+    cites: dict[int, list[tuple[str, int]]] = {}
+    for path in iter_py_files():
+        rel = os.path.relpath(path, REPO)
+        with open(path, encoding="utf-8") as f:
+            for lineno, line in enumerate(f, 1):
+                for m in CITE_RE.finditer(line):
+                    for num in SECNUM_RE.findall(m.group(1)):
+                        cites.setdefault(int(num), []).append((rel, lineno))
+    return cites
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--strict", action="store_true",
+                    help="uncited DESIGN.md sections fail instead of warn")
+    args = ap.parse_args(argv)
+
+    design_path = os.path.join(REPO, "DESIGN.md")
+    if not os.path.exists(design_path):
+        print("check_design_refs: DESIGN.md not found", file=sys.stderr)
+        return 1
+    sections, dups = design_sections(design_path)
+    cites = collect_citations()
+
+    failed = False
+    for sec in sorted(set(dups)):
+        failed = True
+        print(f"ERROR: DESIGN.md defines §{sec} more than once — citations "
+              f"to it are ambiguous", file=sys.stderr)
+    for sec in sorted(set(cites) - set(sections)):
+        failed = True
+        for rel, lineno in cites[sec]:
+            print(f"ERROR: {rel}:{lineno} cites DESIGN.md §{sec}, "
+                  f"which does not exist", file=sys.stderr)
+
+    uncited = sorted(set(sections) - set(cites))
+    for sec in uncited:
+        level = "ERROR" if args.strict else "WARN"
+        print(f"{level}: DESIGN.md §{sec} ({sections[sec]}) is cited by no "
+              f"module", file=sys.stderr)
+    if args.strict and uncited:
+        failed = True
+
+    n_cites = sum(len(v) for v in cites.values())
+    print(f"check_design_refs: {n_cites} citations across "
+          f"{len(cites)} sections; DESIGN.md defines {len(sections)} "
+          f"sections; {'FAIL' if failed else 'OK'}")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -10,16 +10,18 @@ The bottom layer of the repo's architecture (DESIGN.md §1).
 - forest.py random-forest trainer + per-tree oracle + CSE area
 - nsga2.py  vectorized NSGA-II (paper §III-B)
 - dist.py   population sharding + island-model GA across pods
-- rtl.py    bespoke Verilog emission (paper §III synthesis front-end)
+- netlist.py gate-level netlist IR + batched circuit simulator (DESIGN.md §10)
+- rtl.py    bespoke Verilog emission, trees + forests (printed from netlist
+            cells; paper §III synthesis front-end)
 
 Design-space *search* (tree and forest alike) lives in `repro.search`:
 one SearchProblem + pluggable reference/kernel/islands backends behind
 `run_search` (DESIGN.md §7).
 """
-from repro.core import area, nsga2, quant, rtl, tree, train
+from repro.core import area, netlist, nsga2, quant, rtl, tree, train
 
-__all__ = ["approx", "area", "forest", "nsga2", "quant", "rtl", "tree",
-           "train"]
+__all__ = ["approx", "area", "forest", "netlist", "nsga2", "quant", "rtl",
+           "tree", "train"]
 
 
 def __getattr__(name):

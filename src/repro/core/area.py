@@ -37,6 +37,8 @@ from repro.core.quant import MAX_BITS, MIN_BITS
 # sharing is accounted for (benchmarks/paper_tables.py::calibration).
 AREA_AND2_MM2 = 0.55     # printed EGT 2-input gate
 AREA_OR2_MM2 = 0.57
+AREA_NOT_MM2 = 0.28      # inverter: ~half a 2-input EGT gate
+AREA_XOR2_MM2 = 0.83     # 2-input XOR: ~1.5x AND2 (vote adders, DESIGN.md §10)
 NODE_OVERHEAD_MM2 = 0.02  # per internal node: routing + decision buffering
 LEAF_OVERHEAD_MM2 = 0.04  # per leaf: path-AND + class mux contribution
 POWER_PER_MM2_MW = 0.0455  # paper Table I slope (mW per mm^2)
@@ -81,6 +83,18 @@ def build_area_lut() -> tuple[np.ndarray, np.ndarray]:
         chunks.append(row)
         pos += 1 << p
     return np.concatenate(chunks).astype(np.float32), offsets
+
+
+def gate_area_mm2(n_and: int = 0, n_or: int = 0, n_not: int = 0,
+                  n_xor: int = 0) -> float:
+    """Area of an explicit gate inventory (the netlist oracle, DESIGN.md §10).
+
+    Unlike the additive LUT estimate, this prices EVERY gate the circuit
+    actually contains — comparators after CSE, path-AND inverters, and the
+    forest vote adder/argmax logic the LUT models only as per-node/leaf
+    overheads."""
+    return (n_and * AREA_AND2_MM2 + n_or * AREA_OR2_MM2
+            + n_not * AREA_NOT_MM2 + n_xor * AREA_XOR2_MM2)
 
 
 def tree_overhead_mm2(n_comparators: int, n_leaves: int) -> float:

@@ -1,13 +1,19 @@
-"""Bespoke RTL (Verilog) emission for exact/approximate Decision Trees.
+"""Bespoke RTL (Verilog) emission for exact/approximate trees AND forests.
 
-Mirrors the paper's flow: the tree structure is parsed into a fully-parallel
-netlist — one hard-wired comparator per internal node, a path-AND per leaf and
-a one-hot class encoder — ready for synthesis with a printed-technology PDK.
+Mirrors the paper's flow: the tree structure is lowered to the gate-level
+netlist IR (`core.netlist`, DESIGN.md §10) — one hard-wired comparator per
+internal node, a path-AND per leaf, a one-hot class encoder — and the Verilog
+below is printed from those cells, ready for synthesis with a
+printed-technology PDK. A forest becomes per-tree modules plus the
+majority-vote adder tree + argmax chain (§2's vote matmul in hardware). The
+same netlist simulates batched in jnp (`netlist.simulate`), so every emitted
+module has a bit-exact software oracle (`--verify-rtl`).
 """
 from __future__ import annotations
 
 import numpy as np
 
+from repro.core import netlist as nl_mod
 from repro.core.tree import ParallelTree
 
 
@@ -17,19 +23,40 @@ def _comparator_expr(x_name: str, bits: int, t_int: int) -> str:
     return f"({x_name}[7:{8 - bits}] > {bits}'d{t_int})"
 
 
+def _tree_body_lines(cells: nl_mod.TreeCells) -> list[str]:
+    """Comparator + path-AND wires, printed from the netlist cells."""
+    lines = []
+    for i, comp in enumerate(cells.comparators):
+        expr = _comparator_expr(f"x{comp.feature}", comp.bits, comp.t_int)
+        lines.append(f"  wire d{i} = {expr};")
+    for l, leaf in enumerate(cells.leaves):
+        lits = [f"d{c}" if pos else f"~d{c}" for c, pos in leaf.literals]
+        expr = " & ".join(lits) if lits else "1'b1"
+        lines.append(f"  wire leaf{l} = {expr};")
+    return lines
+
+
+def _class_or_expr(cells: nl_mod.TreeCells, pred) -> str:
+    ors = [f"leaf{l}" for l, leaf in enumerate(cells.leaves)
+           if pred(leaf.leaf_class)]
+    return " | ".join(ors) if ors else "1'b0"
+
+
 def emit_verilog(
     pt: ParallelTree,
     bits: np.ndarray,
     t_int: np.ndarray,
     module_name: str = "bespoke_dtree",
 ) -> str:
-    """Emit a bespoke Verilog module for the (approximate) tree.
+    """Emit a bespoke Verilog module for one (approximate) tree.
 
-    bits/t_int: per-comparator precision and substituted integer threshold.
+    bits/t_int: per-comparator precision and SUBSTITUTED integer threshold.
     Inputs are the 8-bit master codes of each used feature; comparators slice
     their top `bits` bits (truncation = right shift, matching core.quant).
     """
-    n_cls_bits = max(1, int(np.ceil(np.log2(max(pt.n_classes, 2)))))
+    nb = nl_mod.NetlistBuilder()
+    cells = nl_mod.build_tree_cells(nb, pt, bits, t_int, pt.n_classes)
+    n_cls_bits = nl_mod.class_bits(pt.n_classes)
     used_features = sorted(set(int(f) for f in pt.feature))
     lines = [
         f"// Auto-generated bespoke approximate decision tree",
@@ -38,35 +65,97 @@ def emit_verilog(
     ]
     lines += [f"    input  wire [7:0] x{f}," for f in used_features]
     lines += [f"    output wire [{n_cls_bits - 1}:0] class_out", ");"]
-
-    # comparator array (all fire in parallel — the bespoke circuit dataflow)
-    for c in range(pt.n_comparators):
-        f = int(pt.feature[c])
-        expr = _comparator_expr(f"x{f}", int(bits[c]), int(t_int[c]))
-        lines.append(f"  wire d{c} = {expr};")
-
-    # per-leaf path AND
-    leaf_terms = []
-    for l in range(pt.n_leaves):
-        lits = []
-        for c in range(pt.n_comparators):
-            v = int(pt.path[l, c])
-            if v == 1:
-                lits.append(f"d{c}")
-            elif v == -1:
-                lits.append(f"~d{c}")
-        leaf_terms.append(" & ".join(lits) if lits else "1'b1")
-        lines.append(f"  wire leaf{l} = {leaf_terms[-1]};")
-
+    lines += _tree_body_lines(cells)
     # one-hot class encoder: OR of leaves per class bit
     for b in range(n_cls_bits):
-        ors = [
-            f"leaf{l}"
-            for l in range(pt.n_leaves)
-            if (int(pt.leaf_class[l]) >> b) & 1
-        ]
-        rhs = " | ".join(ors) if ors else "1'b0"
+        rhs = _class_or_expr(cells, lambda c: (c >> b) & 1)
         lines.append(f"  assign class_out[{b}] = {rhs};")
-
     lines.append("endmodule")
     return "\n".join(lines) + "\n"
+
+
+def emit_forest_verilog(ptrees, bits, t_int, n_classes: int | None = None,
+                        module_name: str = "bespoke_forest") -> str:
+    """Emit a bespoke forest: per-tree vote modules + the majority-vote top.
+
+    bits/t_int are CONCATENATED per-comparator arrays across the K trees
+    (the joint-chromosome layout of `SearchProblem`). Each tree module emits
+    its one-hot class vote (OR of its class's leaves); the top module sums
+    votes per class with an adder tree — §2's vote matmul in hardware — and
+    selects the argmax with first-max tie-breaking, exactly matching
+    `predict_votes` / the fused Pallas kernel (ties -> lowest class index).
+    """
+    if isinstance(ptrees, ParallelTree):
+        ptrees = [ptrees]
+    if n_classes is None:
+        n_classes = max(pt.n_classes for pt in ptrees)
+    bits = np.asarray(bits)
+    t_int = np.asarray(t_int)
+    n_trees = len(ptrees)
+    n_cls_bits = nl_mod.class_bits(n_classes)
+    cnt_bits = max(1, n_trees.bit_length())   # counts reach K
+
+    nb = nl_mod.NetlistBuilder()
+    all_cells, off = [], 0
+    for pt in ptrees:
+        n = pt.n_comparators
+        all_cells.append(nl_mod.build_tree_cells(
+            nb, pt, bits[off:off + n], t_int[off:off + n], n_classes))
+        off += n
+
+    lines = [
+        f"// Auto-generated bespoke approximate random forest",
+        f"// trees={n_trees} comparators={off} classes={n_classes}",
+    ]
+    # per-tree vote modules
+    for k, (pt, cells) in enumerate(zip(ptrees, all_cells)):
+        used = sorted(set(int(f) for f in pt.feature))
+        lines.append(f"module {module_name}_tree{k} (")
+        lines += [f"    input  wire [7:0] x{f}," for f in used]
+        lines += [f"    output wire [{n_classes - 1}:0] vote", ");"]
+        lines += _tree_body_lines(cells)
+        for c in range(n_classes):
+            rhs = _class_or_expr(cells, lambda lc: lc == c)
+            lines.append(f"  assign vote[{c}] = {rhs};")
+        lines.append("endmodule")
+        lines.append("")
+
+    # top module: instantiate trees, adder-tree vote counts, argmax chain
+    used_all = sorted({int(f) for pt in ptrees for f in pt.feature})
+    lines.append(f"module {module_name} (")
+    lines += [f"    input  wire [7:0] x{f}," for f in used_all]
+    lines += [f"    output wire [{n_cls_bits - 1}:0] class_out", ");"]
+    for k, pt in enumerate(ptrees):
+        used = sorted(set(int(f) for f in pt.feature))
+        ports = ", ".join([f".x{f}(x{f})" for f in used] + [f".vote(vote{k})"])
+        lines.append(f"  wire [{n_classes - 1}:0] vote{k};")
+        lines.append(f"  {module_name}_tree{k} t{k} ({ports});")
+    lines.append("  // majority-vote adder tree (the vote matmul in hardware)")
+    for c in range(n_classes):
+        total = " + ".join(f"vote{k}[{c}]" for k in range(n_trees))
+        lines.append(f"  wire [{cnt_bits - 1}:0] cnt{c} = {total};")
+    lines.append("  // argmax chain, ties -> lowest class index")
+    lines.append(f"  wire [{cnt_bits - 1}:0] best0 = cnt0;")
+    lines.append(f"  wire [{n_cls_bits - 1}:0] idx0 = {n_cls_bits}'d0;")
+    for c in range(1, n_classes):
+        lines.append(f"  wire sel{c} = (cnt{c} > best{c - 1});")
+        lines.append(f"  wire [{cnt_bits - 1}:0] best{c} = "
+                     f"sel{c} ? cnt{c} : best{c - 1};")
+        lines.append(f"  wire [{n_cls_bits - 1}:0] idx{c} = "
+                     f"sel{c} ? {n_cls_bits}'d{c} : idx{c - 1};")
+    lines.append(f"  assign class_out = idx{n_classes - 1};")
+    lines.append("endmodule")
+    return "\n".join(lines) + "\n"
+
+
+def emit_design(ptrees, bits, t_int, n_classes: int | None = None,
+                module_name: str | None = None) -> str:
+    """One entry point: a single tree emits `emit_verilog`, K > 1 the forest
+    hierarchy. `bits`/`t_int` are concatenated per-comparator arrays."""
+    if isinstance(ptrees, ParallelTree):
+        ptrees = [ptrees]
+    if len(ptrees) == 1:
+        return emit_verilog(ptrees[0], bits, t_int,
+                            module_name=module_name or "bespoke_dtree")
+    return emit_forest_verilog(ptrees, bits, t_int, n_classes=n_classes,
+                               module_name=module_name or "bespoke_forest")

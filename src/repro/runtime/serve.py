@@ -26,8 +26,29 @@ def make_serve_step(cfg, rules=None):
 
 
 def generate(params, cfg, prompt_batch, n_tokens: int, s_max: int,
-             rules=None, greedy: bool = True, key=None):
-    """Prefill the prompt then decode n_tokens autoregressively."""
+             rules=None, greedy: bool = True, key=None,
+             temperature: float = 1.0):
+    """Prefill the prompt then decode exactly `n_tokens` autoregressively.
+
+    greedy=True: argmax decoding (`key` ignored). greedy=False: temperature
+    sampling via `jax.random.categorical` — `key` is required and is split
+    once per generated token, so the same key reproduces the same sequence.
+    Returns (B, n_tokens) int32; `n_tokens=0` returns an empty (B, 0) array.
+    """
+    if n_tokens <= 0:
+        return jnp.zeros((prompt_batch["tokens"].shape[0], 0), jnp.int32)
+    if not greedy and key is None:
+        raise ValueError("greedy=False sampling requires a PRNG `key`")
+
+    def pick(logits, k):
+        lg = logits[:, -1, :cfg.vocab_size]
+        if greedy:
+            return jnp.argmax(lg, axis=-1).astype(jnp.int32)[:, None]
+        lg = lg.astype(jnp.float32) / jnp.maximum(temperature, 1e-6)
+        return jax.random.categorical(k, lg, axis=-1).astype(jnp.int32)[:, None]
+
+    keys = (jax.random.split(key, n_tokens) if not greedy
+            else [None] * n_tokens)
     logits, caches = lm.prefill(params, cfg, prompt_batch, rules=rules)
     caches = lm.extend_caches(cfg, caches, s_max)
     prompt_len = prompt_batch["tokens"].shape[1] + (
@@ -35,10 +56,10 @@ def generate(params, cfg, prompt_batch, n_tokens: int, s_max: int,
         if prompt_batch.get("prefix_embed") is not None else 0)
 
     serve_step = jax.jit(make_serve_step(cfg, rules))
-    tok = jnp.argmax(logits[:, -1, :cfg.vocab_size], axis=-1)[:, None]
+    tok = pick(logits, keys[0])
     out = [tok]
     for i in range(n_tokens - 1):
         logits, caches = serve_step(params, tok, caches, jnp.int32(prompt_len + i))
-        tok = jnp.argmax(logits[:, -1, :cfg.vocab_size], axis=-1)[:, None]
+        tok = pick(logits, keys[i + 1])
         out.append(tok)
     return jnp.concatenate(out, axis=1)

@@ -23,6 +23,7 @@ from repro.search.problem import (
     decode_chromosome,
     objectives,
     predict_votes,
+    problem_ptrees,
 )
 from repro.search.backends import (
     BACKENDS,
@@ -47,6 +48,7 @@ __all__ = [
     "decode_chromosome",
     "objectives",
     "predict_votes",
+    "problem_ptrees",
     "BACKENDS",
     "make_fitness",
     "make_kernel_fitness",

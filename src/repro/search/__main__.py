@@ -7,10 +7,14 @@
 Trains the exact bespoke tree (or a bootstrap forest with --trees K), runs
 the NSGA-II dual-approximation search on the selected backend, prints the
 pareto front and the best design under the 1% accuracy-loss budget, and —
-with --out — writes pareto.json plus (single-tree only) the bespoke Verilog
-of the selected design. `--checkpoint-every N --resume` gives kill-safe
-long runs on every backend (islands included); see the README's CLI
-reference for the flag-by-flag walkthrough.
+with --out — writes pareto.json plus the bespoke Verilog of the selected
+design (trees AND forests: per-tree modules + the majority-vote adder tree,
+DESIGN.md §10). `--emit-rtl` additionally writes every pareto point's
+Verilog under OUT/rtl/; `--verify-rtl` simulates each point's gate-level
+netlist over the full test set and asserts bit-exactness against the tensor
+program and the kernel backend. `--checkpoint-every N --resume` gives
+kill-safe long runs on every backend (islands included); see the README's
+CLI reference for the flag-by-flag walkthrough.
 """
 from __future__ import annotations
 
@@ -52,7 +56,16 @@ def main(argv=None) -> None:
     ap.add_argument("--n-migrate", type=int, default=4,
                     help="islands backend: elites migrated per round")
     ap.add_argument("--max-loss", type=float, default=0.01)
+    ap.add_argument("--emit-rtl", action="store_true",
+                    help="write every pareto point's Verilog under OUT/rtl/ "
+                         "(single trees and forests alike)")
+    ap.add_argument("--verify-rtl", action="store_true",
+                    help="netlist-simulate every pareto point over the full "
+                         "test set and assert bit-exactness vs the tensor "
+                         "program and the kernel backend")
     args = ap.parse_args(argv)
+    if (args.emit_rtl or args.verify_rtl) and not args.out:
+        ap.error("--emit-rtl/--verify-rtl require --out")
 
     ds = load_dataset(args.dataset)
     if args.trees <= 1:
@@ -76,6 +89,7 @@ def main(argv=None) -> None:
         seed=args.seed, out_dir=args.out,
         checkpoint_every=args.checkpoint_every, resume=args.resume,
         migrate_every=args.migrate_every, n_migrate=args.n_migrate,
+        emit_rtl=args.emit_rtl, verify_rtl=args.verify_rtl,
     )
     print(f"== run_search backend={cfg.backend} pop={cfg.pop_size} "
           f"gens={cfg.n_generations} ==")
@@ -91,28 +105,49 @@ def main(argv=None) -> None:
     best = result.best_under_loss(args.max_loss)
     if best is None:
         print(f"no design within {args.max_loss:.0%} accuracy loss")
-        return
-    o, genes = best
-    a_mm2 = float(o[1]) * problem.exact_area_mm2
-    print(f"\nselected @<={args.max_loss:.0%} loss: area={a_mm2:.1f}mm^2 "
-          f"({1 / o[1]:.2f}x), power={area.power_mw(a_mm2):.2f}mW "
-          f"{'< 3mW: printed-battery OK' if area.power_mw(a_mm2) < 3 else ''}")
+    else:
+        o, genes = best
+        a_mm2 = float(o[1]) * problem.exact_area_mm2
+        print(f"\nselected @<={args.max_loss:.0%} loss: area={a_mm2:.1f}mm^2 "
+              f"({1 / o[1]:.2f}x), power={area.power_mw(a_mm2):.2f}mW "
+              f"{'< 3mW: printed-battery OK' if area.power_mw(a_mm2) < 3 else ''}")
 
-    if args.out and args.trees <= 1:
-        import jax.numpy as jnp
-        from repro.core import quant, rtl
-        bits, marg = quant.decode_genes(jnp.asarray(genes))
-        t_int = quant.substitute(
-            quant.threshold_to_int(jnp.asarray(pt.threshold), bits),
-            marg, bits)
-        verilog = rtl.emit_verilog(pt, np.asarray(bits), np.asarray(t_int))
-        import os
-        path = os.path.join(args.out, f"bespoke_{args.dataset}.v")
-        with open(path, "w") as f:
-            f.write(verilog)
-        print(f"bespoke RTL written to {path} "
-              f"({len(verilog.splitlines())} lines)")
     if args.out:
+        import json
+        import os
+
+        import jax.numpy as jnp
+        from repro.core import rtl
+        if best is not None:
+            bits, t_int = search.decode_chromosome(problem,
+                                                   jnp.asarray(genes))
+            verilog = rtl.emit_design(search.problem_ptrees(problem),
+                                      np.asarray(bits), np.asarray(t_int),
+                                      problem.n_classes)
+            path = os.path.join(args.out, f"bespoke_{args.dataset}.v")
+            with open(path, "w") as f:
+                f.write(verilog)
+            print(f"bespoke {kind} RTL written to {path} "
+                  f"({len(verilog.splitlines())} lines)")
+
+        with open(os.path.join(args.out, "pareto.json")) as f:
+            artifact = json.load(f)
+        pts = artifact["pareto"]
+        if args.emit_rtl:
+            print(f"per-pareto-point RTL: {args.out}/rtl/ "
+                  f"({len(pts)} designs: "
+                  f"{', '.join(p['rtl'] for p in pts[:3])}"
+                  f"{', ...' if len(pts) > 3 else ''})")
+        if args.verify_rtl:
+            print(f"RTL verified: {len(pts)}/{len(pts)} pareto points "
+                  f"bit-exact over {problem.x8.shape[0]} test samples "
+                  f"(netlist sim == predict_votes == kernel backend)")
+        gaps = [p["area_netlist_mm2"] / p["area_mm2"] for p in pts
+                if p["area_mm2"] > 0]
+        if gaps:
+            print(f"estimated-vs-netlist area: netlist/LUT ratio "
+                  f"min {min(gaps):.2f} / mean {sum(gaps) / len(gaps):.2f} / "
+                  f"max {max(gaps):.2f} across {len(gaps)} points")
         print(f"pareto artifact: {args.out}/pareto.json")
 
 

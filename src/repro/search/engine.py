@@ -58,6 +58,11 @@ class SearchConfig:
     out_dir: str | None = None
     checkpoint_every: int = 0       # generations between saves; 0 = off
     resume: bool = False
+    # hardware loop (DESIGN.md §10) — both need out_dir
+    emit_rtl: bool = False          # write per-pareto-point Verilog (OUT/rtl/)
+    verify_rtl: bool = False        # netlist-simulate every pareto point and
+                                    # assert bit-exactness vs predict_votes
+                                    # and the kernel backend
 
 
 @dataclasses.dataclass
@@ -332,6 +337,8 @@ def run_search(problem: SearchProblem, cfg: SearchConfig | None = None,
     if cfg.checkpoint_every < 0:
         raise ValueError(
             f"checkpoint_every must be >= 0, got {cfg.checkpoint_every}")
+    if (cfg.emit_rtl or cfg.verify_rtl) and not cfg.out_dir:
+        raise ValueError("emit_rtl/verify_rtl require out_dir")
 
     t0 = time.time()
     if cfg.backend == "islands":
@@ -357,25 +364,93 @@ def run_search(problem: SearchProblem, cfg: SearchConfig | None = None,
         n_dispatches=n_dispatches,
     )
     if cfg.out_dir:
-        write_pareto_artifact(problem, result, cfg.out_dir)
+        write_pareto_artifact(problem, result, cfg.out_dir,
+                              emit_rtl=cfg.emit_rtl, verify_rtl=cfg.verify_rtl)
     return result
 
 
+def _make_kernel_predict(problem: SearchProblem):
+    """Single-chromosome (2N,) -> (B,) predictions through the Pallas path —
+    the third leg of the RTL verification triangle (DESIGN.md §10)."""
+    from repro.kernels import ops as kops
+
+    operands = kops.prepare_operands(
+        problem.feature, problem.path, problem.path_len, problem.n_neg,
+        problem.leaf_class, problem.n_classes, problem.n_features)
+
+    def predict(genes):
+        scale, thr = kops.decode_population(problem.threshold, genes[None, :])
+        return kops.tree_infer_predict(problem.x8, operands, scale, thr)[0]
+
+    return predict
+
+
 def write_pareto_artifact(problem: SearchProblem, result: SearchResult,
-                          out_dir: str) -> str:
-    """pareto.json: objectives + genes + decoded per-comparator designs."""
+                          out_dir: str, *, emit_rtl: bool = False,
+                          verify_rtl: bool = False) -> str:
+    """pareto.json: objectives + genes + decoded designs + hardware artifact.
+
+    Every point records the decoded `bits`/`margin` AND the substituted
+    integer thresholds `t_int` (plus the top-level trained float `threshold`
+    array), so a design re-materializes into RTL from the artifact alone; the
+    additive-LUT `area_mm2` estimate is paired with the synthesized-netlist
+    `area_netlist_mm2` (gate counts after CSE/constant propagation) — the
+    paper's Fig. 5 estimated-vs-actual gap as a measured artifact.
+
+    emit_rtl: write each point's Verilog (tree or forest) under OUT/rtl/.
+    verify_rtl: simulate each point's netlist over the full test set and
+    assert bit-exactness against `predict_votes` and the kernel backend.
+    """
+    from repro.core import netlist, rtl
+    from repro.search.problem import predict_votes, problem_ptrees
+
     os.makedirs(out_dir, exist_ok=True)
+    ptrees = problem_ptrees(problem)
+    if emit_rtl:
+        os.makedirs(os.path.join(out_dir, "rtl"), exist_ok=True)
+    kernel_predict = _make_kernel_predict(problem) if verify_rtl else None
+
     points = []
-    for o, g in zip(result.pareto_objs, result.pareto_genes):
-        bits, margin = quant.decode_genes(jnp.asarray(g))
-        points.append({
+    for i, (o, g) in enumerate(zip(result.pareto_objs, result.pareto_genes)):
+        g_j = jnp.asarray(g)
+        bits_j, margin = quant.decode_genes(g_j)
+        t_sub_j = quant.substitute(
+            quant.threshold_to_int(problem.threshold, bits_j), margin, bits_j)
+        bits = np.asarray(bits_j)
+        t_sub = np.asarray(t_sub_j)
+        circuit = netlist.build_circuit(ptrees, bits, t_sub,
+                                        problem.n_classes)
+        point = {
             "acc_loss": float(o[0]),
             "norm_area": float(o[1]),
             "area_mm2": float(o[1] * problem.exact_area_mm2),
-            "bits": np.asarray(bits).tolist(),
+            "area_netlist_mm2": round(netlist.netlist_area_mm2(circuit), 4),
+            "netlist_gates": netlist.gate_counts(circuit),
+            "bits": bits.tolist(),
             "margin": np.asarray(margin).tolist(),
+            "t_int": t_sub.tolist(),
             "genes": np.asarray(g, np.float64).round(6).tolist(),
-        })
+        }
+        if emit_rtl:
+            verilog = rtl.emit_design(ptrees, bits, t_sub, problem.n_classes)
+            rel = os.path.join("rtl", f"point_{i:02d}.v")
+            with open(os.path.join(out_dir, rel), "w") as f:
+                f.write(verilog)
+            point["rtl"] = rel
+        if verify_rtl:
+            sim = np.asarray(netlist.simulate(circuit, problem.x8))
+            ref = np.asarray(predict_votes(problem, bits_j, t_sub_j))
+            ker = np.asarray(kernel_predict(g_j))
+            if not (np.array_equal(sim, ref) and np.array_equal(sim, ker)):
+                n_ref = int((sim != ref).sum())
+                n_ker = int((sim != ker).sum())
+                raise AssertionError(
+                    f"pareto point {i}: netlist simulation diverges from "
+                    f"predict_votes on {n_ref} and from the kernel backend "
+                    f"on {n_ker} of {sim.shape[0]} test samples")
+            point["verified"] = True
+        points.append(point)
+
     payload = {
         "backend": result.backend,
         "wall_s": round(result.wall_s, 3),
@@ -383,8 +458,15 @@ def write_pareto_artifact(problem: SearchProblem, result: SearchResult,
         "n_dispatches": result.n_dispatches,
         "n_trees": problem.n_trees,
         "n_comparators": problem.n_comparators,
+        "n_classes": problem.n_classes,
+        "tree_comparators": list(problem.tree_comparators),
+        "tree_leaves": list(problem.tree_leaves),
+        "feature": np.asarray(problem.feature).tolist(),
+        "threshold": np.asarray(problem.threshold, np.float64)
+                       .round(8).tolist(),
         "exact_accuracy": problem.exact_accuracy,
         "exact_area_mm2": problem.exact_area_mm2,
+        "rtl_verified": bool(verify_rtl),
         "pareto": points,
     }
     path = os.path.join(out_dir, "pareto.json")

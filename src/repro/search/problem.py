@@ -201,6 +201,39 @@ def build_problem(ptrees, x_test: np.ndarray, y_test: np.ndarray,
     return dataclasses.replace(problem, exact_accuracy=exact_acc)
 
 
+def problem_ptrees(problem: SearchProblem) -> list:
+    """Recover the per-tree `ParallelTree`s from the concatenated layout.
+
+    The block-diagonal super-tree is sliced back apart using the static
+    per-tree comparator/leaf counts, so the hardware pipeline (netlist
+    build, RTL emission, DESIGN.md §10) needs only the `SearchProblem` —
+    the original trees don't have to be threaded through the engine.
+    """
+    feature = np.asarray(problem.feature)
+    threshold = np.asarray(problem.threshold)
+    path = np.asarray(problem.path)
+    path_len = np.asarray(problem.path_len)
+    n_neg = np.asarray(problem.n_neg)
+    leaf_class = np.asarray(problem.leaf_class)
+    ptrees, n_off, l_off = [], 0, 0
+    for n_k, l_k in zip(problem.tree_comparators, problem.tree_leaves):
+        block = path[l_off:l_off + l_k, n_off:n_off + n_k]
+        if n_k == 0:  # single-leaf tree: ParallelTree keeps one dummy column
+            block = np.zeros((l_k, 1), np.int8)
+        ptrees.append(ParallelTree(
+            feature=feature[n_off:n_off + n_k],
+            threshold=threshold[n_off:n_off + n_k],
+            path=np.ascontiguousarray(block),
+            path_len=path_len[l_off:l_off + l_k],
+            n_neg=n_neg[l_off:l_off + l_k],
+            leaf_class=leaf_class[l_off:l_off + l_k],
+            n_classes=problem.n_classes,
+        ))
+        n_off += n_k
+        l_off += l_k
+    return ptrees
+
+
 def build_tree_problem(ptree: ParallelTree, x_test, y_test) -> SearchProblem:
     return build_problem(ptree, x_test, y_test)
 

@@ -1,9 +1,11 @@
-"""Runtime substrate: checkpointing, data pipeline, compression (1-device)."""
+"""Runtime substrate: checkpointing, data pipeline, compression, serving
+(1-device)."""
 import os
 
 import numpy as np
 import jax
 import jax.numpy as jnp
+import pytest
 
 from repro.data import SyntheticLMData
 from repro.optim import compress
@@ -69,6 +71,58 @@ def test_data_has_learnable_structure():
             hits += toks[b, t] in succ[toks[b, t - 1]]
             total += 1
     assert hits / total > 0.5
+
+
+@pytest.fixture(scope="module")
+def serve_setup():
+    from repro.configs import get_config, reduced_config
+    from repro.models import transformer
+    cfg = reduced_config(get_config("llama3.2-3b"))
+    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    tok = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0, cfg.vocab_size)
+    return cfg, params, {"tokens": tok}
+
+
+def test_generate_zero_tokens_returns_empty(serve_setup):
+    """Regression: n_tokens=0 used to return 1 token (the prefill argmax)."""
+    from repro.runtime import serve
+    cfg, params, batch = serve_setup
+    out = serve.generate(params, cfg, batch, n_tokens=0, s_max=32)
+    assert out.shape == (2, 0)
+
+
+def test_generate_sampling_is_wired(serve_setup):
+    """Regression: greedy/key used to be accepted but silently ignored —
+    sampling degraded to argmax. Now: greedy ignores the key, sampling is
+    key-deterministic, key-sensitive, and collapses to greedy as T -> 0."""
+    from repro.runtime import serve
+    cfg, params, batch = serve_setup
+    greedy = serve.generate(params, cfg, batch, n_tokens=5, s_max=32)
+    greedy_keyed = serve.generate(params, cfg, batch, n_tokens=5, s_max=32,
+                                  key=jax.random.PRNGKey(7))
+    assert greedy.shape == (2, 5)
+    np.testing.assert_array_equal(np.asarray(greedy),
+                                  np.asarray(greedy_keyed))
+
+    sample = lambda k, t: serve.generate(
+        params, cfg, batch, n_tokens=5, s_max=32, greedy=False,
+        key=jax.random.PRNGKey(k), temperature=t)
+    s1, s2 = sample(3, 2.0), sample(3, 2.0)
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+    assert 0 <= int(s1.min()) and int(s1.max()) < cfg.vocab_size
+    # different keys must be able to produce different sequences
+    assert any(not np.array_equal(np.asarray(s1), np.asarray(sample(k, 2.0)))
+               for k in (5, 11, 23))
+    # near-zero temperature collapses to the greedy sequence
+    cold = sample(9, 1e-5)
+    np.testing.assert_array_equal(np.asarray(cold), np.asarray(greedy))
+
+
+def test_generate_sampling_requires_key(serve_setup):
+    from repro.runtime import serve
+    cfg, params, batch = serve_setup
+    with pytest.raises(ValueError, match="key"):
+        serve.generate(params, cfg, batch, n_tokens=2, s_max=32, greedy=False)
 
 
 def test_int8_quantize_roundtrip_error():

@@ -39,6 +39,18 @@ AREA_AND2_MM2 = 0.55     # printed EGT 2-input gate
 AREA_OR2_MM2 = 0.57
 AREA_NOT_MM2 = 0.28      # inverter: ~half a 2-input EGT gate
 AREA_XOR2_MM2 = 0.83     # 2-input XOR: ~1.5x AND2 (vote adders, DESIGN.md §10)
+
+# Every gate area above is an integer multiple of this quantum, so a
+# comparator area is an exact integer number of quanta. The sweep engine
+# (DESIGN.md §11) scores area by summing *integer* quanta in f32 — exact for
+# any reduction order/tiling as long as the total stays < 2^24 quanta
+# (167 m^2 of circuit) — and scales once at the end, which is what makes the
+# vmapped multi-problem fitness bit-identical to the serial loop.
+AREA_QUANTUM_MM2 = 0.01
+_AND2_UNITS = round(AREA_AND2_MM2 / AREA_QUANTUM_MM2)
+_OR2_UNITS = round(AREA_OR2_MM2 / AREA_QUANTUM_MM2)
+assert abs(_AND2_UNITS * AREA_QUANTUM_MM2 - AREA_AND2_MM2) < 1e-12
+assert abs(_OR2_UNITS * AREA_QUANTUM_MM2 - AREA_OR2_MM2) < 1e-12
 NODE_OVERHEAD_MM2 = 0.02  # per internal node: routing + decision buffering
 LEAF_OVERHEAD_MM2 = 0.04  # per leaf: path-AND + class mux contribution
 POWER_PER_MM2_MW = 0.0455  # paper Table I slope (mW per mm^2)
@@ -83,6 +95,34 @@ def build_area_lut() -> tuple[np.ndarray, np.ndarray]:
         chunks.append(row)
         pos += 1 << p
     return np.concatenate(chunks).astype(np.float32), offsets
+
+
+def comparator_area_units(t: int, p: int) -> int:
+    """Comparator area as an exact integer count of AREA_QUANTUM_MM2 quanta."""
+    n_and, n_or = comparator_gate_counts(t, p)
+    return n_and * _AND2_UNITS + n_or * _OR2_UNITS
+
+
+def build_area_unit_lut() -> tuple[np.ndarray, np.ndarray]:
+    """Integer-quanta twin of `build_area_lut` (same indexing scheme).
+
+    Entries are small integers stored as f32 (exactly representable), so a
+    masked/padded population sum of LUT rows is bit-identical under any
+    reduction order — the property the vmapped sweep fitness relies on
+    (DESIGN.md §11). `lut_units * AREA_QUANTUM_MM2` recovers mm^2.
+    """
+    offsets = np.zeros(MAX_BITS + 1, dtype=np.int32)
+    chunks = []
+    pos = 0
+    for p in range(0, MAX_BITS + 1):
+        offsets[p] = pos
+        if p < MIN_BITS:
+            continue
+        row = np.array([comparator_area_units(t, p) for t in range(1 << p)],
+                       dtype=np.float32)
+        chunks.append(row)
+        pos += 1 << p
+    return np.concatenate(chunks), offsets
 
 
 def gate_area_mm2(n_and: int = 0, n_or: int = 0, n_not: int = 0,

@@ -257,6 +257,43 @@ def make_chunk(fitness_fn, cfg: NSGA2Config, chunk_len: int):
     return chunk
 
 
+def make_batched_init(fitness_from_ctx, n_genes: int, cfg: NSGA2Config,
+                      seed_genes=None):
+    """`init_state` vmapped over a leading problem axis (DESIGN.md §11).
+
+    `fitness_from_ctx(ctx, pop)` evaluates one problem's population given its
+    per-problem context pytree (e.g. a padded `sweep.PaddedProblem`); the
+    returned function maps stacked `(keys, ctxs)` — both with a leading
+    problem axis — to a stacked `NSGA2State`, initializing every problem in
+    ONE dispatch (jit the result). `seed_genes` is shared across problems
+    (the sweep pads every bucket member to the same chromosome length, and
+    the exact design is the same inert-padded encoding for all)."""
+
+    def init_one(key, ctx):
+        return init_state(key, lambda pop: fitness_from_ctx(ctx, pop),
+                          n_genes, cfg, seed_genes=seed_genes)
+
+    return jax.vmap(init_one)
+
+
+def make_batched_chunk(fitness_from_ctx, cfg: NSGA2Config, chunk_len: int):
+    """`make_chunk` vmapped over a leading problem axis (DESIGN.md §11).
+
+    One dispatch of the returned function advances EVERY problem in the
+    batch by `chunk_len` generations: the scanned generation program (§9) is
+    vmapped over stacked per-problem contexts, so the whole bucket of
+    campaigns costs one host round-trip. Per-problem arithmetic is
+    bit-identical to running `make_chunk` problem-by-problem (the sweep's
+    serial oracle; tests pin it) — every cross-lane reduction the GA step
+    performs is either integer-valued in f32 or elementwise."""
+
+    def chunk_one(state, ctx):
+        return make_chunk(lambda pop: fitness_from_ctx(ctx, pop),
+                          cfg, chunk_len)(state)
+
+    return jax.vmap(chunk_one)
+
+
 def run(key, fitness_fn, n_genes: int, cfg: NSGA2Config,
         state: NSGA2State | None = None, jit: bool = True,
         seed_genes=None) -> NSGA2State:

@@ -9,9 +9,14 @@ One abstraction for every NSGA-II dual-approximation search the repo runs:
                       multi-tree inference), `islands` (per-device GA with
                       ring migration);
   `run_search`      — the one driver: checkpointable state, pareto-front
-                      artifacts, backend selection.
+                      artifacts, backend selection;
+  `run_sweep`       — the batched multi-dataset campaign (DESIGN.md §11):
+                      problems padded to bucket boundaries and advanced with
+                      one vmapped dispatch per bucket per stage, scored
+                      against the paper's Tables I/II.
 
-CLI: ``python -m repro.search --dataset seeds --backend kernel --trees 4``.
+CLI: ``python -m repro.search --dataset seeds --backend kernel --trees 4``
+or ``python -m repro.search sweep --datasets all --report``.
 """
 from repro.search.problem import (
     SearchProblem,
@@ -34,8 +39,18 @@ from repro.search.backends import (
 from repro.search.engine import (
     SearchConfig,
     SearchResult,
+    netlist_area_ratios,
     run_search,
     write_pareto_artifact,
+)
+from repro.search.sweep import (
+    SweepConfig,
+    SweepResult,
+    build_problems,
+    pad_problem,
+    plan_buckets,
+    run_sweep,
+    write_sweep_report,
 )
 
 __all__ = [
@@ -55,6 +70,14 @@ __all__ = [
     "make_reference_fitness",
     "SearchConfig",
     "SearchResult",
+    "netlist_area_ratios",
     "run_search",
     "write_pareto_artifact",
+    "SweepConfig",
+    "SweepResult",
+    "build_problems",
+    "pad_problem",
+    "plan_buckets",
+    "run_sweep",
+    "write_sweep_report",
 ]

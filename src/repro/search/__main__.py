@@ -3,6 +3,14 @@
     PYTHONPATH=src python -m repro.search --dataset seeds
     PYTHONPATH=src python -m repro.search --dataset seeds --trees 4 \
         --backend kernel --pop 64 --gens 40 --out runs/seeds_forest
+    PYTHONPATH=src python -m repro.search sweep --datasets all --report
+
+The `sweep` subcommand runs the paper's whole multi-dataset campaign as a
+handful of vmapped programs (DESIGN.md §11): problems are padded to bucket
+boundaries, stacked, and advanced with one device dispatch per bucket per
+stage; per-dataset `pareto.json` artifacts land under `OUT/<dataset>/` and
+`--report` scores every dataset against the paper's Tables I/II
+(`OUT/sweep_report.json` + `OUT/REPORT.md`).
 
 Trains the exact bespoke tree (or a bootstrap forest with --trees K), runs
 the NSGA-II dual-approximation search on the selected backend, prints the
@@ -30,7 +38,107 @@ from repro.datasets import DATASET_SPECS, load_dataset
 from repro import search
 
 
+def sweep_main(argv=None) -> None:
+    """`python -m repro.search sweep`: the batched full-suite campaign."""
+    from repro.search import sweep as sweep_mod
+
+    ap = argparse.ArgumentParser(prog="python -m repro.search sweep")
+    ap.add_argument("--datasets", default="all",
+                    help="comma-separated dataset names, or 'all' for the "
+                         "paper's full 10-dataset suite")
+    ap.add_argument("--trees", type=int, default=1,
+                    help="1 = single bespoke DT per dataset; K>1 = bootstrap "
+                         "forest per dataset (joint chromosome)")
+    ap.add_argument("--pop", type=int, default=64)
+    ap.add_argument("--gens", type=int, default=40)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="runs/sweep",
+                    help="artifact root: per-dataset pareto.json under "
+                         "OUT/<dataset>/, report at OUT/sweep_report.json")
+    ap.add_argument("--max-buckets", type=int,
+                    default=sweep_mod.DEFAULT_MAX_BUCKETS,
+                    help="merge shape buckets down to at most this many "
+                         "vmapped programs")
+    ap.add_argument("--serial", action="store_true",
+                    help="run the per-problem serial loop (the bit-exact "
+                         "oracle the vmapped path is tested against)")
+    ap.add_argument("--emit-rtl", action="store_true",
+                    help="write every pareto point's Verilog under "
+                         "OUT/<dataset>/rtl/")
+    ap.add_argument("--verify-rtl", action="store_true",
+                    help="netlist-simulate every pareto point of every "
+                         "dataset and assert bit-exactness vs the tensor "
+                         "program and the kernel backend")
+    ap.add_argument("--report", action="store_true",
+                    help="score the campaign against paper Tables I/II "
+                         "(OUT/sweep_report.json + OUT/REPORT.md)")
+    ap.add_argument("--max-loss", type=float, default=0.01)
+    args = ap.parse_args(argv)
+
+    names = (sorted(DATASET_SPECS) if args.datasets == "all"
+             else [n.strip() for n in args.datasets.split(",") if n.strip()])
+    unknown = [n for n in names if n not in DATASET_SPECS]
+    if unknown:
+        ap.error(f"unknown datasets: {unknown}; options: "
+                 f"{sorted(DATASET_SPECS)}")
+
+    kind = "tree" if args.trees <= 1 else f"forest[{args.trees}]"
+    print(f"== sweep: {len(names)} datasets, {kind} per dataset, "
+          f"pop={args.pop} gens={args.gens} ==")
+    problems = sweep_mod.build_problems(names, n_trees=args.trees,
+                                        verbose=True)
+
+    cfg = sweep_mod.SweepConfig(
+        pop_size=args.pop, n_generations=args.gens, seed=args.seed,
+        vmapped=not args.serial, max_buckets=args.max_buckets,
+        out_dir=args.out, emit_rtl=args.emit_rtl,
+        verify_rtl=args.verify_rtl)
+    sweep = sweep_mod.run_sweep(problems, cfg)
+
+    for i, run in enumerate(sweep.bucket_runs):
+        d = run.bucket.dims
+        print(f"bucket {i}: {', '.join(run.bucket.names)} -> padded "
+              f"(N={d[0]}, L={d[1]}, C={d[2]}, F={d[3]}, B={d[4]}), "
+              f"{run.n_dispatches} dispatches, {run.wall_s:.1f}s")
+    print(f"campaign: {sweep.n_dispatches} dispatches over "
+          f"{len(sweep.bucket_runs)} buckets (serial per-dataset baseline: "
+          f"{sweep.serial_baseline_dispatches()}), wall {sweep.wall_s:.1f}s")
+
+    for name in sorted(sweep.results):
+        result = sweep.results[name]
+        problem = problems[name]
+        best = result.best_under_loss(args.max_loss)
+        if best is None:
+            line = f"no design within {args.max_loss:.0%} loss"
+        else:
+            o, _ = best
+            a_mm2 = float(o[1]) * problem.exact_area_mm2
+            line = (f"@<={args.max_loss:.0%} loss: {1 / max(float(o[1]), 1e-9):.2f}x "
+                    f"smaller, {a_mm2:.1f}mm^2, "
+                    f"{area.power_mw(a_mm2):.2f}mW")
+        print(f"  {name}: exact_acc={problem.exact_accuracy:.3f} "
+              f"pareto={len(result.pareto_objs)} pts; {line}")
+    if args.verify_rtl:
+        n_pts = sum(len(r.pareto_objs) for r in sweep.results.values())
+        print(f"RTL verified: {n_pts} pareto points across {len(names)} "
+              f"datasets (netlist sim == predict_votes == kernel backend)")
+
+    if args.report:
+        meta = {"datasets": args.datasets, "trees": args.trees,
+                "pop": args.pop, "gens": args.gens, "seed": args.seed,
+                "mode": "serial" if args.serial else "vmapped"}
+        json_path, md_path = sweep_mod.write_sweep_report(
+            sweep, problems, args.out, meta=meta, max_loss=args.max_loss)
+        print(f"report: {json_path} + {md_path}")
+    print(f"artifacts: {args.out}/<dataset>/pareto.json")
+
+
 def main(argv=None) -> None:
+    import sys
+
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if argv and argv[0] == "sweep":
+        return sweep_main(argv[1:])
     ap = argparse.ArgumentParser(prog="python -m repro.search")
     ap.add_argument("--dataset", default="seeds",
                     choices=sorted(DATASET_SPECS))
@@ -142,8 +250,7 @@ def main(argv=None) -> None:
             print(f"RTL verified: {len(pts)}/{len(pts)} pareto points "
                   f"bit-exact over {problem.x8.shape[0]} test samples "
                   f"(netlist sim == predict_votes == kernel backend)")
-        gaps = [p["area_netlist_mm2"] / p["area_mm2"] for p in pts
-                if p["area_mm2"] > 0]
+        gaps = search.netlist_area_ratios(pts)
         if gaps:
             print(f"estimated-vs-netlist area: netlist/LUT ratio "
                   f"min {min(gaps):.2f} / mean {sum(gaps) / len(gaps):.2f} / "

@@ -385,6 +385,14 @@ def _make_kernel_predict(problem: SearchProblem):
     return predict
 
 
+def netlist_area_ratios(points) -> list[float]:
+    """Per-point netlist/LUT area ratio from `pareto.json` points — the
+    paper's Fig. 5 estimated-vs-actual gap (DESIGN.md §10). Points whose
+    LUT estimate is zero (degenerate constant-false designs) are skipped."""
+    return [p["area_netlist_mm2"] / p["area_mm2"] for p in points
+            if p["area_mm2"] > 0]
+
+
 def write_pareto_artifact(problem: SearchProblem, result: SearchResult,
                           out_dir: str, *, emit_rtl: bool = False,
                           verify_rtl: bool = False) -> str:

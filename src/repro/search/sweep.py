@@ -1,0 +1,652 @@
+"""Batched full-suite campaign engine (DESIGN.md §11).
+
+The paper's evaluation is one uniform campaign over ten UCI datasets
+(Tables I/II, Figs. 4-5), but `run_search` drives one `SearchProblem` at a
+time — ten sequential GA runs, ten times the dispatch overhead, and a CI
+that only ever exercised two of the ten scenarios. This module runs the
+whole campaign as a handful of vmapped programs:
+
+  1. **Pad** every problem's operands up to bucket-boundary shapes
+     (`pad_problem`): comparator/leaf/class/feature/sample axes are rounded
+     up to powers of two and filled with *inert* genes — padded comparators
+     carry zero path entries, padded leaves an unreachable satisfaction
+     target, padded samples the impossible label -1 — so the padded
+     objectives reproduce the unpadded semantics (predictions bit-exact,
+     objectives equal to float rounding; the inertness itself is exact:
+     changing pad genes never changes an objective bit).
+  2. **Bucket** problems sharing a padded shape (`plan_buckets`), greedily
+     merging the cheapest pairs until at most `max_buckets` remain, so the
+     whole 10-dataset suite compiles a handful of programs instead of ten.
+  3. **Stack & vmap**: each bucket's operands stack on a leading problem
+     axis and `nsga2.make_batched_init` / `make_batched_chunk` (§9's
+     chunked scan, vmapped) advance every member with ONE dispatch per
+     stage — `SweepResult.n_dispatches` is 2 per bucket vs 2 per dataset
+     for the serial loop.
+
+The per-problem serial loop (`vmapped=False`) is kept as the bit-exact
+oracle: it runs the SAME padded problems through the un-vmapped
+`nsga2.make_chunk`, and tests assert the final populations are
+bit-identical array-for-array. Exactness under vmap holds because every
+cross-lane reduction is integer-valued in f32: accuracy sums 0/1 matches,
+and area sums the integer-quanta LUT (`area.build_area_unit_lut`), scaling
+to mm^2 only at the end.
+
+Per-dataset artifacts reuse the single-run pipeline unchanged: each
+problem's final population is unpadded (real gene columns sliced back out)
+and handed to `engine.write_pareto_artifact`, so `pareto.json`, `--emit-rtl`
+and `--verify-rtl` behave exactly as in `run_search`. `write_sweep_report`
+then scores every dataset against the paper's published Tables I/II
+(`repro.datasets.paper_refs`).
+
+CLI: ``python -m repro.search sweep --datasets all --report``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import area as area_mod
+from repro.core import nsga2, quant
+from repro.search import engine as _engine
+from repro.search.problem import SearchProblem
+
+GRANULE = 8            # minimum padded extent per axis
+DEFAULT_MAX_BUCKETS = 6
+
+
+# ---------------------------------------------------------------------------
+# padding
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class PaddedProblem:
+    """One `SearchProblem` padded to bucket-boundary shapes with inert genes.
+
+    The padding is masked so a padded evaluation means the same thing as the
+    unpadded one:
+
+      - padded **comparators** gather feature 0 and carry all-zero `path`
+        columns, so their decisions never reach a leaf score; their rows are
+        masked out of the area sum (`comp_valid`);
+      - padded **leaves** carry `path_len = 1` over an all-zero path row —
+        a satisfaction target of 1 that a zero score can never meet — so
+        they never vote;
+      - padded **classes** receive votes from no leaf, and first-max argmax
+        cannot select them because every real sample collects >= 1 real
+        vote (exactly one leaf per real tree fires);
+      - padded **samples** carry label -1, which no prediction (>= 0) can
+        match; accuracy divides by the real sample count `n_valid`;
+      - padded **features** are zero columns no real comparator gathers.
+
+    `area_lut_units` holds the integer-quanta LUT: the masked population
+    area sum stays integer-valued in f32, hence bit-identical under any
+    vmap tiling (DESIGN.md §11); `AREA_QUANTUM_MM2` scales once at the end.
+    """
+
+    feature: jnp.ndarray         # (Np,) int32
+    threshold: jnp.ndarray       # (Np,) float32
+    path: jnp.ndarray            # (Lp, Np) int8
+    path_len: jnp.ndarray        # (Lp,) int32
+    n_neg: jnp.ndarray           # (Lp,) int32
+    leaf_onehot: jnp.ndarray     # (Lp, Cp) float32
+    x8: jnp.ndarray              # (Bp, Fp) int32
+    y: jnp.ndarray               # (Bp,) int32 (-1 on padded rows)
+    comp_valid: jnp.ndarray      # (Np,) bool
+    n_valid: jnp.ndarray         # () float32 — real test-sample count
+    area_lut_units: jnp.ndarray  # integer-quanta area LUT (f32-exact)
+    lut_offsets: jnp.ndarray     # (MAX_BITS+1,) int32
+    overhead_mm2: jnp.ndarray    # () float32
+    exact_area_mm2: jnp.ndarray  # () float32
+    exact_accuracy: jnp.ndarray  # () float32
+
+    @property
+    def n_genes(self) -> int:
+        return 2 * int(self.feature.shape[0])
+
+
+jax.tree_util.register_pytree_node(
+    PaddedProblem,
+    lambda p: (tuple(getattr(p, f.name)
+                     for f in dataclasses.fields(PaddedProblem)), None),
+    lambda _, children: PaddedProblem(*children),
+)
+
+
+def _round_up_pow2(n: int, granule: int = GRANULE) -> int:
+    """Next power of two >= max(n, granule): the bucket boundary per axis."""
+    n = max(int(n), int(granule))
+    p = 1
+    while p < n:
+        p <<= 1
+    return p
+
+
+def problem_dims(problem: SearchProblem) -> tuple[int, int, int, int, int]:
+    """Real (unpadded) operand extents: (N, L, C, F, B)."""
+    return (problem.n_comparators, problem.n_leaves, problem.n_classes,
+            problem.n_features, int(problem.x8.shape[0]))
+
+
+def pad_problem(problem: SearchProblem,
+                dims: tuple[int, int, int, int, int]) -> PaddedProblem:
+    """Pad a `SearchProblem` to `dims` = (Np, Lp, Cp, Fp, Bp) (see class doc)."""
+    np_, lp, cp, fp, bp = dims
+    n, l, c, f, b = problem_dims(problem)
+    if not (np_ >= n and lp >= l and cp >= c and fp >= f and bp >= b):
+        raise ValueError(f"padded dims {dims} smaller than problem dims "
+                         f"{(n, l, c, f, b)}")
+
+    feature = np.zeros(np_, np.int32)
+    feature[:n] = np.asarray(problem.feature)
+    threshold = np.full(np_, 0.5, np.float32)
+    threshold[:n] = np.asarray(problem.threshold)
+    path = np.zeros((lp, np_), np.int8)
+    path[:l, :n] = np.asarray(problem.path)
+    path_len = np.ones(lp, np.int32)              # unreachable target for pads
+    path_len[:l] = np.asarray(problem.path_len)
+    n_neg = np.zeros(lp, np.int32)
+    n_neg[:l] = np.asarray(problem.n_neg)
+    leaf_onehot = np.zeros((lp, cp), np.float32)  # padded leaves never vote
+    leaf_onehot[np.arange(l), np.asarray(problem.leaf_class)] = 1.0
+    x8 = np.zeros((bp, fp), np.int32)
+    x8[:b, :f] = np.asarray(problem.x8)
+    y = np.full(bp, -1, np.int32)
+    y[:b] = np.asarray(problem.y)
+    comp_valid = np.zeros(np_, bool)
+    comp_valid[:n] = True
+    lut_units, offsets = area_mod.build_area_unit_lut()
+
+    return PaddedProblem(
+        feature=jnp.asarray(feature),
+        threshold=jnp.asarray(threshold),
+        path=jnp.asarray(path),
+        path_len=jnp.asarray(path_len),
+        n_neg=jnp.asarray(n_neg),
+        leaf_onehot=jnp.asarray(leaf_onehot),
+        x8=jnp.asarray(x8),
+        y=jnp.asarray(y),
+        comp_valid=jnp.asarray(comp_valid),
+        n_valid=jnp.float32(b),
+        area_lut_units=jnp.asarray(lut_units),
+        lut_offsets=jnp.asarray(offsets),
+        overhead_mm2=jnp.float32(problem.overhead_mm2),
+        exact_area_mm2=jnp.float32(problem.exact_area_mm2),
+        exact_accuracy=jnp.float32(problem.exact_accuracy),
+    )
+
+
+# ---------------------------------------------------------------------------
+# padded evaluation (mirrors search.problem's reference primitives)
+# ---------------------------------------------------------------------------
+
+def padded_predict(pp: PaddedProblem, genes):
+    """(Bp,) voted class per sample — §2's dataflow on padded operands.
+
+    On the real sample rows this is bit-exact vs `problem.predict_votes`
+    with the real gene slice (tests pin it): every padded contribution is
+    structurally zero, and all reductions are integer-valued in f32.
+    """
+    bits, margin = quant.decode_genes(genes)
+    t_int = quant.threshold_to_int(pp.threshold, bits)
+    t_sub = quant.substitute(t_int, margin, bits)
+    x_p = quant.inputs_at_precision(pp.x8[:, pp.feature], bits)
+    d = (x_p > t_sub[None, :]).astype(jnp.float32)
+    score = d @ pp.path.T.astype(jnp.float32)
+    target = (pp.path_len - pp.n_neg).astype(jnp.float32)
+    sat = (score == target[None, :]).astype(jnp.float32)
+    votes = sat @ pp.leaf_onehot
+    return jnp.argmax(votes, axis=1)
+
+
+def padded_objectives(pp: PaddedProblem, genes):
+    """(accuracy loss, normalized area) for one padded chromosome (2*Np,).
+
+    Matches `search.objectives` on the real slice up to float rounding (the
+    area term sums integer quanta instead of f32 mm^2 rows — that is what
+    buys vmap-order invariance); the *inertness* of pad genes is exact.
+    """
+    pred = padded_predict(pp, genes)
+    acc = jnp.sum((pred == pp.y).astype(jnp.float32)) / pp.n_valid
+
+    bits, margin = quant.decode_genes(genes)
+    t_sub = quant.substitute(
+        quant.threshold_to_int(pp.threshold, bits), margin, bits)
+    idx = pp.lut_offsets[bits] + t_sub
+    units = jnp.where(pp.comp_valid, pp.area_lut_units[idx], 0.0).sum()
+    area = units * area_mod.AREA_QUANTUM_MM2 + pp.overhead_mm2
+    return jnp.stack([pp.exact_accuracy - acc, area / pp.exact_area_mm2])
+
+
+def population_objectives(pp: PaddedProblem, pop):
+    """(P, 2*Np) genes -> (P, 2) objectives — the `fitness_from_ctx` handed
+    to `nsga2.make_batched_init` / `make_batched_chunk`."""
+    return jax.vmap(lambda g: padded_objectives(pp, g))(pop)
+
+
+# ---------------------------------------------------------------------------
+# bucketing
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Bucket:
+    """A set of problems sharing one padded shape (N, L, C, F, B)."""
+    names: tuple[str, ...]
+    dims: tuple[int, int, int, int, int]
+
+    def dims_dict(self) -> dict:
+        keys = ("n_comparators", "n_leaves", "n_classes", "n_features",
+                "n_samples")
+        return dict(zip(keys, self.dims))
+
+
+def _eval_cost(dims: tuple[int, ...]) -> float:
+    """Dominant per-chromosome FLOP terms of §2's dataflow at padded shapes."""
+    np_, lp, cp, fp, bp = dims
+    return float(bp) * (np_ + np_ * lp + lp * cp)
+
+
+def plan_buckets(problems: dict[str, SearchProblem], *,
+                 granule: int = GRANULE,
+                 max_buckets: int = DEFAULT_MAX_BUCKETS) -> list[Bucket]:
+    """Group problems by power-of-two-rounded operand shape, then greedily
+    merge the pair costing the least extra padded compute until at most
+    `max_buckets` buckets remain. Deterministic given the problem dict
+    (iteration is name-sorted); merged dims are elementwise maxima, so they
+    stay powers of two."""
+    if max_buckets < 1:
+        raise ValueError(f"max_buckets must be >= 1, got {max_buckets}")
+    groups: dict[tuple, list[str]] = {}
+    for name in sorted(problems):
+        key = tuple(_round_up_pow2(d, granule)
+                    for d in problem_dims(problems[name]))
+        groups.setdefault(key, []).append(name)
+    buckets = [Bucket(names=tuple(v), dims=k)
+               for k, v in sorted(groups.items())]
+
+    while len(buckets) > max_buckets:
+        best = None
+        for i in range(len(buckets)):
+            for j in range(i + 1, len(buckets)):
+                bi, bj = buckets[i], buckets[j]
+                merged = tuple(max(a, b) for a, b in zip(bi.dims, bj.dims))
+                extra = (_eval_cost(merged) * (len(bi.names) + len(bj.names))
+                         - _eval_cost(bi.dims) * len(bi.names)
+                         - _eval_cost(bj.dims) * len(bj.names))
+                if best is None or extra < best[0]:
+                    best = (extra, i, j, merged)
+        _, i, j, merged = best
+        buckets[i] = Bucket(names=tuple(sorted(buckets[i].names
+                                               + buckets[j].names)),
+                            dims=merged)
+        del buckets[j]
+    return sorted(buckets, key=lambda b: b.names)
+
+
+def stack_padded(padded: list[PaddedProblem]) -> PaddedProblem:
+    """Stack same-shape PaddedProblems on a leading problem axis."""
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *padded)
+
+
+# ---------------------------------------------------------------------------
+# the campaign driver
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SweepConfig:
+    pop_size: int = 64
+    n_generations: int = 40
+    seed: int = 0
+    vmapped: bool = True            # False = the serial bit-exact oracle
+    granule: int = GRANULE
+    max_buckets: int = DEFAULT_MAX_BUCKETS
+    out_dir: str | None = None      # per-dataset artifacts under OUT/<name>/
+    emit_rtl: bool = False
+    verify_rtl: bool = False
+
+
+@dataclasses.dataclass
+class BucketRun:
+    bucket: Bucket
+    n_dispatches: int
+    wall_s: float
+
+
+@dataclasses.dataclass
+class SweepResult:
+    results: dict[str, "_engine.SearchResult"]
+    bucket_runs: list[BucketRun]
+    wall_s: float
+
+    @property
+    def n_dispatches(self) -> int:
+        """Generation-loop dispatches summed over buckets — the acceptance
+        number: 2 per bucket (init + one chunk) vs 2 per dataset serially."""
+        return sum(r.n_dispatches for r in self.bucket_runs)
+
+    def serial_baseline_dispatches(self) -> int:
+        """What the same campaign costs as per-dataset `run_search` calls."""
+        return 2 * len(self.results)
+
+
+def _problem_keys(names_sorted: list[str], seed: int):
+    """Per-problem PRNG keys: dataset i of the name-sorted campaign always
+    folds in i, so the key never depends on the bucket plan. (The padded
+    chromosome length IS part of the plan — GA draws are shape-dependent —
+    so results are reproducible per (seed, plan), and vmapped-vs-serial
+    equality holds at equal plan.)"""
+    base = jax.random.PRNGKey(seed)
+    return {name: jax.random.fold_in(base, i)
+            for i, name in enumerate(names_sorted)}
+
+
+def run_sweep(problems: dict[str, SearchProblem],
+              cfg: SweepConfig | None = None, **overrides) -> SweepResult:
+    """Run the NSGA-II campaign over every problem in `problems`.
+
+    Returns per-dataset `SearchResult`s (pareto genes already unpadded back
+    to each problem's real 2N columns) plus bucket-level dispatch/wall
+    accounting. With `out_dir`, each dataset writes the standard
+    `pareto.json` artifact (and RTL, per `emit_rtl`/`verify_rtl`) under
+    `out_dir/<dataset>/` through the single-run pipeline.
+    """
+    cfg = dataclasses.replace(cfg or SweepConfig(), **overrides)
+    if not problems:
+        raise ValueError("run_sweep needs at least one problem")
+    if (cfg.emit_rtl or cfg.verify_rtl) and not cfg.out_dir:
+        raise ValueError("emit_rtl/verify_rtl require out_dir")
+
+    names_sorted = sorted(problems)
+    keys = _problem_keys(names_sorted, cfg.seed)
+    buckets = plan_buckets(problems, granule=cfg.granule,
+                           max_buckets=cfg.max_buckets)
+    nsga_cfg = nsga2.NSGA2Config(pop_size=cfg.pop_size,
+                                 n_generations=cfg.n_generations)
+
+    t0 = time.time()
+    results: dict[str, _engine.SearchResult] = {}
+    bucket_runs: list[BucketRun] = []
+    for bucket in buckets:
+        t_b = time.time()
+        padded = [pad_problem(problems[n], bucket.dims) for n in bucket.names]
+        bucket_keys = jnp.stack([keys[n] for n in bucket.names])
+        n_genes = 2 * bucket.dims[0]
+        seed_genes = quant.exact_genes(bucket.dims[0])
+
+        if cfg.vmapped:
+            stacked = stack_padded(padded)
+            init = jax.jit(nsga2.make_batched_init(
+                population_objectives, n_genes, nsga_cfg,
+                seed_genes=seed_genes))
+            states = init(bucket_keys, stacked)
+            chunk = jax.jit(nsga2.make_batched_chunk(
+                population_objectives, nsga_cfg, cfg.n_generations))
+            states = chunk(states, stacked)
+            states = jax.device_get(states)
+            per_problem = [
+                jax.tree_util.tree_map(lambda a, i=i: a[i], states)
+                for i in range(len(padded))]
+            n_dispatches = 2
+        else:
+            # serial oracle: the SAME padded problems through the un-vmapped
+            # chunked scan, one at a time. Like the vmapped path, both
+            # stages are jitted AND take the padded problem as an argument
+            # (closed-over operands would constant-fold and round
+            # differently; eager evaluation likewise) — that symmetry is
+            # what the bit-exactness contract rests on.
+            init_fn = jax.jit(lambda key, pp: nsga2.init_state(
+                key, lambda pop: population_objectives(pp, pop),
+                n_genes, nsga_cfg, seed_genes=seed_genes))
+            chunk_fn = jax.jit(lambda state, pp: nsga2.make_chunk(
+                lambda pop: population_objectives(pp, pop),
+                nsga_cfg, cfg.n_generations)(state))
+            per_problem = []
+            n_dispatches = 0
+            for pp, key in zip(padded, bucket_keys):
+                state = init_fn(key, pp)
+                state = chunk_fn(state, pp)
+                per_problem.append(jax.device_get(state))
+                n_dispatches += 2
+        wall_b = time.time() - t_b
+        bucket_runs.append(BucketRun(bucket, n_dispatches, wall_b))
+
+        for name, state in zip(bucket.names, per_problem):
+            problem = problems[name]
+            genes = np.asarray(state.genes)[:, :problem.n_genes]  # unpad
+            objs = np.asarray(state.objs)
+            p_objs, p_genes = nsga2.pareto_front(objs, genes)
+            result = _engine.SearchResult(
+                state=state,
+                pareto_objs=np.asarray(p_objs),
+                pareto_genes=np.asarray(p_genes),
+                backend="sweep" if cfg.vmapped else "sweep-serial",
+                wall_s=wall_b,
+                n_evaluations=cfg.pop_size * (1 + cfg.n_generations),
+                n_dispatches=n_dispatches,  # shared across the bucket
+            )
+            results[name] = result
+            if cfg.out_dir:
+                _engine.write_pareto_artifact(
+                    problem, result, os.path.join(cfg.out_dir, name),
+                    emit_rtl=cfg.emit_rtl, verify_rtl=cfg.verify_rtl)
+
+    return SweepResult(results=results, bucket_runs=bucket_runs,
+                       wall_s=time.time() - t0)
+
+
+# ---------------------------------------------------------------------------
+# campaign construction + paper scoring
+# ---------------------------------------------------------------------------
+
+def build_problems(datasets, n_trees: int = 1,
+                   verbose: bool = False) -> dict[str, SearchProblem]:
+    """Train the exact bespoke tree (or forest, `n_trees > 1`) per dataset."""
+    from repro.core.forest import train_forest
+    from repro.core.train import train_tree
+    from repro.core.tree import to_parallel
+    from repro.datasets import load_dataset
+    from repro.search.problem import build_forest_problem, build_tree_problem
+
+    out = {}
+    for name in datasets:
+        t0 = time.time()
+        ds = load_dataset(name)
+        if n_trees <= 1:
+            tree = train_tree(ds.x_train, ds.y_train, ds.n_classes)
+            problem = build_tree_problem(to_parallel(tree), ds.x_test,
+                                         ds.y_test)
+        else:
+            forest = train_forest(ds.x_train, ds.y_train, ds.n_classes,
+                                  n_trees=n_trees)
+            problem = build_forest_problem(forest, ds.x_test, ds.y_test)
+        out[name] = problem
+        if verbose:
+            print(f"  {name}: comparators={problem.n_comparators} "
+                  f"leaves={problem.n_leaves} "
+                  f"exact_acc={problem.exact_accuracy:.3f} "
+                  f"({time.time() - t0:.1f}s)")
+    return out
+
+
+def _netlist_ratios(pareto_path: str) -> dict | None:
+    """Estimated-vs-netlist area spread from a written pareto.json."""
+    if not os.path.exists(pareto_path):
+        return None
+    with open(pareto_path) as f:
+        artifact = json.load(f)
+    ratios = _engine.netlist_area_ratios(artifact["pareto"])
+    if not ratios:
+        return None
+    return {"min": round(min(ratios), 4),
+            "mean": round(sum(ratios) / len(ratios), 4),
+            "max": round(max(ratios), 4),
+            "n_points": len(ratios)}
+
+
+def write_sweep_report(sweep: SweepResult,
+                       problems: dict[str, SearchProblem],
+                       out_dir: str, *, meta: dict | None = None,
+                       max_loss: float = 0.01) -> tuple[str, str]:
+    """Score the campaign against the paper and write the report artifacts.
+
+    Emits `out_dir/sweep_report.json` (machine-readable: per-dataset
+    accuracy deltas vs Table I, normalized area at the loss budget vs
+    Table II, estimated-vs-netlist spreads from each dataset's pareto.json,
+    bucket/dispatch accounting) and `out_dir/REPORT.md` (the same as one
+    human-readable table). Returns (json_path, md_path).
+    """
+    from repro.datasets.paper_refs import (
+        PAPER_MEAN_AREA_REDUCTION_1PCT,
+        PAPER_TABLE1,
+        PAPER_TABLE2_NORM,
+    )
+
+    os.makedirs(out_dir, exist_ok=True)
+    rows: dict[str, dict] = {}
+    reductions = []
+    acc_deltas = []
+    for name in sorted(sweep.results):
+        result = sweep.results[name]
+        problem = problems[name]
+        paper1 = PAPER_TABLE1.get(name)
+        paper2 = PAPER_TABLE2_NORM.get(name)
+        row: dict = {
+            "exact_accuracy": round(problem.exact_accuracy, 4),
+            "n_comparators": problem.n_comparators,
+            "n_trees": problem.n_trees,
+            "exact_area_mm2": round(problem.exact_area_mm2, 2),
+            "n_pareto_points": int(len(result.pareto_objs)),
+            "wall_s": round(result.wall_s, 2),
+        }
+        if paper1:
+            row["paper_accuracy"] = paper1[0]
+            row["accuracy_delta"] = round(problem.exact_accuracy - paper1[0], 4)
+            row["paper_n_comparators"] = paper1[1]
+            row["paper_area_mm2"] = paper1[3]
+            acc_deltas.append(abs(row["accuracy_delta"]))
+        best = result.best_under_loss(max_loss)
+        if best is not None:
+            objs, _ = best
+            norm_area = float(objs[1])
+            area_mm2 = norm_area * problem.exact_area_mm2
+            row["at_budget"] = {
+                "max_loss": max_loss,
+                "acc_loss": round(float(objs[0]), 4),
+                "norm_area": round(norm_area, 4),
+                "area_mm2": round(area_mm2, 2),
+                "power_mw": round(area_mod.power_mw(area_mm2), 3),
+            }
+            if norm_area > 0:
+                reductions.append(1.0 / norm_area)
+            if paper2:
+                row["at_budget"]["paper_norm_area"] = paper2[0]
+                row["at_budget"]["norm_area_delta"] = round(
+                    norm_area - paper2[0], 4)
+        else:
+            row["at_budget"] = None
+        ratios = _netlist_ratios(os.path.join(out_dir, name, "pareto.json"))
+        if ratios:
+            row["netlist_vs_estimated_area"] = ratios
+        rows[name] = row
+
+    payload = {
+        "meta": meta or {},
+        "buckets": [{
+            "datasets": list(r.bucket.names),
+            "dims": r.bucket.dims_dict(),
+            "n_dispatches": r.n_dispatches,
+            "wall_s": round(r.wall_s, 2),
+        } for r in sweep.bucket_runs],
+        "n_dispatches": sweep.n_dispatches,
+        "serial_baseline_dispatches": sweep.serial_baseline_dispatches(),
+        "wall_s": round(sweep.wall_s, 2),
+        "datasets": rows,
+        "summary": {
+            "n_datasets": len(rows),
+            "n_at_budget": len(reductions),
+            "mean_area_reduction_at_budget":
+                round(float(np.mean(reductions)), 3) if reductions else None,
+            "paper_mean_area_reduction_1pct": PAPER_MEAN_AREA_REDUCTION_1PCT,
+            "mean_abs_accuracy_delta_vs_paper":
+                round(float(np.mean(acc_deltas)), 4) if acc_deltas else None,
+        },
+    }
+    json_path = os.path.join(out_dir, "sweep_report.json")
+    tmp = json_path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(payload, f, indent=1)
+    os.replace(tmp, json_path)
+
+    md_path = os.path.join(out_dir, "REPORT.md")
+    with open(md_path + ".tmp", "w") as f:
+        f.write(_report_markdown(payload, max_loss))
+    os.replace(md_path + ".tmp", md_path)
+    return json_path, md_path
+
+
+def _report_markdown(payload: dict, max_loss: float) -> str:
+    lines = ["# Full-suite sweep report", ""]
+    meta = payload.get("meta") or {}
+    if meta:
+        opts = " ".join(f"{k}={v}" for k, v in sorted(meta.items()))
+        lines += [f"Campaign: {opts}", ""]
+    lines += [
+        f"Dispatches: **{payload['n_dispatches']}** over "
+        f"{len(payload['buckets'])} buckets (serial per-dataset baseline: "
+        f"{payload['serial_baseline_dispatches']}); "
+        f"wall {payload['wall_s']}s.",
+        "",
+        "| bucket | datasets | padded (N, L, C, F, B) | dispatches |",
+        "|---|---|---|---|",
+    ]
+    for i, b in enumerate(payload["buckets"]):
+        d = b["dims"]
+        dims = (f"({d['n_comparators']}, {d['n_leaves']}, {d['n_classes']}, "
+                f"{d['n_features']}, {d['n_samples']})")
+        lines.append(f"| {i} | {', '.join(b['datasets'])} | {dims} "
+                     f"| {b['n_dispatches']} |")
+    lines += [
+        "",
+        f"Per dataset, scored against paper Tables I/II "
+        f"(budget: {max_loss:.0%} accuracy loss):",
+        "",
+        "| dataset | acc (paper) | Δacc | comparators (paper) "
+        "| norm area @budget (paper) | netlist/LUT mean |",
+        "|---|---|---|---|---|---|",
+    ]
+    for name, row in payload["datasets"].items():
+        pacc = row.get("paper_accuracy")
+        acc = (f"{row['exact_accuracy']:.3f} ({pacc:.3f})"
+               if pacc is not None else f"{row['exact_accuracy']:.3f} (—)")
+        dacc = (f"{row['accuracy_delta']:+.3f}"
+                if "accuracy_delta" in row else "—")
+        ncmp = (f"{row['n_comparators']} ({row['paper_n_comparators']})"
+                if "paper_n_comparators" in row
+                else f"{row['n_comparators']} (—)")
+        at = row.get("at_budget")
+        if at:
+            pna = at.get("paper_norm_area")
+            na = (f"{at['norm_area']:.3f} ({pna:.3f})"
+                  if pna is not None else f"{at['norm_area']:.3f} (—)")
+        else:
+            na = "none under budget"
+        ratios = row.get("netlist_vs_estimated_area")
+        ratio = f"{ratios['mean']:.2f}" if ratios else "—"
+        lines.append(f"| {name} | {acc} | {dacc} | {ncmp} | {na} | {ratio} |")
+    s = payload["summary"]
+    lines += [
+        "",
+        f"Mean area reduction at budget: "
+        f"**{s['mean_area_reduction_at_budget']}x** over "
+        f"{s['n_at_budget']}/{s['n_datasets']} datasets "
+        f"(paper: {s['paper_mean_area_reduction_1pct']}x at 1%). "
+        f"Mean |Δaccuracy| vs Table I: "
+        f"{s['mean_abs_accuracy_delta_vs_paper']}.",
+        "",
+    ]
+    return "\n".join(lines)

@@ -1,0 +1,90 @@
+"""Spec invariants for all 10 synthetic UCI stand-ins (repro.datasets).
+
+The sweep engine (DESIGN.md §11) runs every dataset in one campaign, so every
+spec entry — not just the two CI historically touched — must uphold the
+contract the search stack assumes: spec-matching shapes, in-range labels,
+integer-level grids, determinism, and train-statistic-only normalization.
+"""
+import numpy as np
+import pytest
+
+from repro.datasets import DATASET_SPECS, load_dataset, quantize_u8
+from repro.datasets.synthetic import _generate, _normalize01, train_test_split
+
+ALL_NAMES = sorted(DATASET_SPECS)
+
+
+def test_suite_is_the_papers_ten():
+    assert ALL_NAMES == ["arrhythmia", "balance", "cardio", "har",
+                         "mammographic", "pendigits", "redwine", "seeds",
+                         "vertebral", "whitewine"]
+
+
+@pytest.mark.parametrize("name", ALL_NAMES)
+def test_spec_shapes_and_labels(name):
+    spec = DATASET_SPECS[name]
+    ds = load_dataset(name)
+    n_train, n_test = ds.x_train.shape[0], ds.x_test.shape[0]
+    assert n_train + n_test == spec.n_samples
+    assert n_test == int(round(spec.n_samples * 0.3))  # paper's 30% split
+    assert ds.x_train.shape[1] == ds.x_test.shape[1] == spec.n_features
+    assert ds.n_classes == spec.n_classes
+    for y in (ds.y_train, ds.y_test):
+        assert y.dtype == np.int32
+        assert y.min() >= 0 and y.max() < spec.n_classes
+    # every class must actually occur, or per-dataset accuracies/votes
+    # silently measure a smaller problem than the paper's
+    assert len(np.unique(np.concatenate([ds.y_train, ds.y_test]))) \
+        == spec.n_classes
+    for x in (ds.x_train, ds.x_test):
+        assert x.dtype == np.float32
+        assert x.min() >= 0.0 and x.max() <= 1.0
+
+
+@pytest.mark.parametrize("name", [n for n in ALL_NAMES
+                                  if DATASET_SPECS[n].integer_levels])
+def test_integer_level_grids_respected(name):
+    """Small-integer UCI features (balance, mammographic) stay on their
+    k-level grid end to end: normalization rescales but cannot add levels."""
+    spec = DATASET_SPECS[name]
+    ds = load_dataset(name)
+    for x in (ds.x_train, ds.x_test):
+        for j in range(spec.n_features):
+            assert len(np.unique(x[:, j])) <= spec.integer_levels
+
+
+@pytest.mark.parametrize("name", ALL_NAMES)
+def test_load_dataset_deterministic(name):
+    a, b = load_dataset(name), load_dataset(name)
+    np.testing.assert_array_equal(a.x_train, b.x_train)
+    np.testing.assert_array_equal(a.y_train, b.y_train)
+    np.testing.assert_array_equal(a.x_test, b.x_test)
+    np.testing.assert_array_equal(a.y_test, b.y_test)
+
+
+@pytest.mark.parametrize("name", ALL_NAMES)
+def test_normalization_uses_train_statistics_only(name):
+    """No test leakage: the loaded arrays equal min-max normalization with
+    statistics computed from the raw TRAIN split alone."""
+    spec = DATASET_SPECS[name]
+    x, y = _generate(spec)
+    xtr_raw, ytr, xte_raw, yte = train_test_split(x, y, 0.3, seed=0)
+    want_tr, want_te = _normalize01(xtr_raw, xte_raw)
+    ds = load_dataset(name)
+    np.testing.assert_array_equal(ds.x_train, want_tr)
+    np.testing.assert_array_equal(ds.x_test, want_te)
+    np.testing.assert_array_equal(ds.y_train, ytr)
+    np.testing.assert_array_equal(ds.y_test, yte)
+    # train stats span the full [0, 1] range; test merely lands inside it
+    lo, hi = ds.x_train.min(axis=0), ds.x_train.max(axis=0)
+    spanned = (np.asarray(xtr_raw).max(axis=0)
+               - np.asarray(xtr_raw).min(axis=0)) > 1e-9
+    assert np.all(lo[spanned] == 0.0)
+    assert np.all(hi[spanned] == 1.0)
+
+
+def test_quantize_u8_master_grid():
+    x = np.array([0.0, 0.5, 1.0, 0.999999], np.float32)
+    q = quantize_u8(x)
+    assert q.dtype == np.uint8
+    np.testing.assert_array_equal(q, [0, 128, 255, 255])

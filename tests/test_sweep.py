@@ -1,0 +1,244 @@
+"""Batched full-suite sweep engine (DESIGN.md §11): inert padding, the
+vmapped-vs-serial bit-exactness contract on mixed-shape buckets, bucket
+planning, dispatch accounting, artifacts/report, CLI."""
+import json
+import os
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import forest as forest_mod
+from repro.core.train import train_tree
+from repro.core.tree import to_parallel
+from repro.datasets import load_dataset
+from repro import search
+from repro.search import sweep as sweep_mod
+
+
+@pytest.fixture(scope="module")
+def campaign():
+    """Mixed-shape, mixed-kind campaign: two single trees + one forest."""
+    problems = {}
+    for name in ("seeds", "vertebral"):
+        ds = load_dataset(name)
+        pt = to_parallel(train_tree(ds.x_train, ds.y_train, ds.n_classes))
+        problems[name] = search.build_tree_problem(pt, ds.x_test, ds.y_test)
+    ds = load_dataset("seeds")
+    fr = forest_mod.train_forest(ds.x_train, ds.y_train, ds.n_classes,
+                                 n_trees=2)
+    problems["seeds_forest2"] = search.build_forest_problem(
+        fr, ds.x_test, ds.y_test)
+    return problems
+
+
+def _bucket_dims_for(problems):
+    """One merged bucket covering every problem (the mixed-shape case)."""
+    (bucket,) = sweep_mod.plan_buckets(problems, max_buckets=1)
+    return bucket.dims
+
+
+# ---------------------------------------------------------------------------
+# padding semantics
+# ---------------------------------------------------------------------------
+
+def test_pad_genes_are_inert_bitexact(campaign):
+    """Two chromosomes that differ ONLY in pad-gene columns produce
+    bit-identical objectives and predictions — the masking contract."""
+    dims = _bucket_dims_for(campaign)
+    rng = np.random.default_rng(0)
+    for name, problem in campaign.items():
+        pp = sweep_mod.pad_problem(problem, dims)
+        g_real = rng.uniform(0, 1, problem.n_genes).astype(np.float32)
+        a = rng.uniform(0, 1, pp.n_genes).astype(np.float32)
+        b = rng.uniform(0, 1, pp.n_genes).astype(np.float32)
+        a[:problem.n_genes] = g_real
+        b[:problem.n_genes] = g_real
+        oa = np.asarray(sweep_mod.padded_objectives(pp, jnp.asarray(a)))
+        ob = np.asarray(sweep_mod.padded_objectives(pp, jnp.asarray(b)))
+        np.testing.assert_array_equal(oa, ob, err_msg=name)
+        pa = np.asarray(sweep_mod.padded_predict(pp, jnp.asarray(a)))
+        pb = np.asarray(sweep_mod.padded_predict(pp, jnp.asarray(b)))
+        np.testing.assert_array_equal(pa, pb, err_msg=name)
+
+
+def test_padded_matches_unpadded_semantics(campaign):
+    """Padded evaluation == the unpadded SearchProblem primitives: real-row
+    predictions bit-exact, objectives equal to float rounding (the area term
+    sums integer quanta, trading last-ulp identity for vmap-order
+    invariance)."""
+    dims = _bucket_dims_for(campaign)
+    rng = np.random.default_rng(1)
+    for name, problem in campaign.items():
+        pp = sweep_mod.pad_problem(problem, dims)
+        b_real = int(problem.x8.shape[0])
+        for _ in range(4):
+            g_real = rng.uniform(0, 1, problem.n_genes).astype(np.float32)
+            g_pad = rng.uniform(0, 1, pp.n_genes).astype(np.float32)
+            g_pad[:problem.n_genes] = g_real
+
+            bits, t_sub = search.decode_chromosome(problem,
+                                                   jnp.asarray(g_real))
+            want_pred = np.asarray(
+                search.predict_votes(problem, bits, t_sub))
+            got_pred = np.asarray(
+                sweep_mod.padded_predict(pp, jnp.asarray(g_pad)))[:b_real]
+            np.testing.assert_array_equal(got_pred, want_pred, err_msg=name)
+
+            want_obj = np.asarray(
+                search.objectives(problem, jnp.asarray(g_real)))
+            got_obj = np.asarray(
+                sweep_mod.padded_objectives(pp, jnp.asarray(g_pad)))
+            np.testing.assert_allclose(got_obj, want_obj, atol=2e-6,
+                                       err_msg=name)
+
+
+def test_pad_problem_rejects_too_small_dims(campaign):
+    problem = campaign["vertebral"]
+    with pytest.raises(ValueError, match="smaller than"):
+        sweep_mod.pad_problem(problem, (8, 8, 8, 8, 8))
+
+
+# ---------------------------------------------------------------------------
+# the acceptance contract: vmapped campaign == serial oracle, bit-exact
+# ---------------------------------------------------------------------------
+
+def test_vmapped_bitexact_vs_serial_on_mixed_bucket(campaign):
+    """One merged bucket holding two trees + a forest of three different
+    shapes: the vmapped campaign's final populations are bit-identical
+    array-for-array to the per-problem serial loop."""
+    kw = dict(pop_size=8, n_generations=3, seed=0, max_buckets=1)
+    vm = sweep_mod.run_sweep(campaign, vmapped=True, **kw)
+    sr = sweep_mod.run_sweep(campaign, vmapped=False, **kw)
+    assert len(vm.bucket_runs) == 1
+    for name in campaign:
+        v, s = vm.results[name], sr.results[name]
+        np.testing.assert_array_equal(np.asarray(v.state.genes),
+                                      np.asarray(s.state.genes),
+                                      err_msg=name)
+        np.testing.assert_array_equal(np.asarray(v.state.objs),
+                                      np.asarray(s.state.objs), err_msg=name)
+        np.testing.assert_array_equal(v.pareto_objs, s.pareto_objs,
+                                      err_msg=name)
+        np.testing.assert_array_equal(v.pareto_genes, s.pareto_genes,
+                                      err_msg=name)
+
+
+def test_vmapped_bitexact_vs_serial_across_buckets(campaign):
+    """Same contract when the planner keeps problems in separate buckets.
+
+    (Only the per-dataset PRNG *key* is bucket-plan independent; the padded
+    chromosome length is part of the plan, and GA random draws are
+    shape-dependent, so different plans legitimately explore differently —
+    the contract is vmapped == serial at EQUAL plan.)"""
+    kw = dict(pop_size=8, n_generations=3, seed=0, max_buckets=3)
+    vm = sweep_mod.run_sweep(campaign, vmapped=True, **kw)
+    sr = sweep_mod.run_sweep(campaign, vmapped=False, **kw)
+    assert len(vm.bucket_runs) > 1
+    for name in campaign:
+        np.testing.assert_array_equal(np.asarray(vm.results[name].state.genes),
+                                      np.asarray(sr.results[name].state.genes),
+                                      err_msg=name)
+        np.testing.assert_array_equal(vm.results[name].pareto_objs,
+                                      sr.results[name].pareto_objs,
+                                      err_msg=name)
+
+
+# ---------------------------------------------------------------------------
+# bucket planning + dispatch accounting
+# ---------------------------------------------------------------------------
+
+def test_plan_buckets_pow2_and_merge(campaign):
+    buckets = sweep_mod.plan_buckets(campaign, max_buckets=2)
+    assert 1 <= len(buckets) <= 2
+    covered = sorted(n for b in buckets for n in b.names)
+    assert covered == sorted(campaign)
+    for b in buckets:
+        for name in b.names:
+            real = sweep_mod.problem_dims(campaign[name])
+            for d_pad, d_real in zip(b.dims, real):
+                assert d_pad >= max(d_real, sweep_mod.GRANULE)
+                assert d_pad & (d_pad - 1) == 0  # power of two
+    # deterministic
+    again = sweep_mod.plan_buckets(campaign, max_buckets=2)
+    assert buckets == again
+
+
+def test_plan_buckets_rejects_zero_max(campaign):
+    with pytest.raises(ValueError, match="max_buckets"):
+        sweep_mod.plan_buckets(campaign, max_buckets=0)
+
+
+def test_dispatch_accounting_beats_serial_baseline(campaign):
+    sweep = sweep_mod.run_sweep(campaign, pop_size=8, n_generations=2,
+                                max_buckets=1)
+    # one bucket: init + one chunked scan for every problem at once
+    assert sweep.n_dispatches == 2
+    assert sweep.serial_baseline_dispatches() == 2 * len(campaign)
+    assert sweep.n_dispatches < sweep.serial_baseline_dispatches()
+    for result in sweep.results.values():
+        assert result.n_dispatches == 2
+        assert result.n_evaluations == 8 * (1 + 2)
+
+
+# ---------------------------------------------------------------------------
+# artifacts, report, CLI
+# ---------------------------------------------------------------------------
+
+def test_sweep_artifacts_unpadded_and_report(campaign, tmp_path):
+    out = str(tmp_path / "sweep")
+    sweep = sweep_mod.run_sweep(campaign, pop_size=8, n_generations=2,
+                                max_buckets=1, out_dir=out)
+    for name, problem in campaign.items():
+        with open(os.path.join(out, name, "pareto.json")) as f:
+            artifact = json.load(f)
+        assert artifact["n_trees"] == problem.n_trees
+        assert artifact["n_comparators"] == problem.n_comparators
+        for point in artifact["pareto"]:
+            # genes/bits were unpadded back to the REAL comparator count
+            assert len(point["bits"]) == problem.n_comparators
+            assert len(point["genes"]) == problem.n_genes
+            assert all(2 <= b <= 8 for b in point["bits"])
+
+    json_path, md_path = sweep_mod.write_sweep_report(
+        sweep, campaign, out, meta={"pop": 8, "gens": 2})
+    with open(json_path) as f:
+        report = json.load(f)
+    assert report["n_dispatches"] == 2
+    assert report["serial_baseline_dispatches"] == 2 * len(campaign)
+    assert sorted(report["datasets"]) == sorted(campaign)
+    for name in ("seeds", "vertebral"):
+        row = report["datasets"][name]
+        assert row["paper_accuracy"] > 0
+        assert "accuracy_delta" in row
+        assert row["netlist_vs_estimated_area"]["n_points"] >= 1
+    # the forest stand-in is not a paper scenario: scored without refs
+    assert "paper_accuracy" not in report["datasets"]["seeds_forest2"]
+    md = open(md_path).read()
+    assert "| dataset |" in md and "seeds" in md
+
+
+def test_run_sweep_validates_config(campaign):
+    with pytest.raises(ValueError, match="out_dir"):
+        sweep_mod.run_sweep(campaign, pop_size=8, n_generations=1,
+                            emit_rtl=True)
+    with pytest.raises(ValueError, match="at least one"):
+        sweep_mod.run_sweep({})
+
+
+def test_sweep_cli_smoke(tmp_path, capsys):
+    from repro.search.__main__ import main
+    out = str(tmp_path / "cli")
+    main(["sweep", "--datasets", "seeds,vertebral", "--pop", "8",
+          "--gens", "2", "--out", out, "--report"])
+    captured = capsys.readouterr().out
+    assert "campaign:" in captured and "dispatches" in captured
+    assert os.path.exists(os.path.join(out, "seeds", "pareto.json"))
+    assert os.path.exists(os.path.join(out, "sweep_report.json"))
+    assert os.path.exists(os.path.join(out, "REPORT.md"))
+
+
+def test_sweep_cli_rejects_unknown_dataset(tmp_path):
+    from repro.search.__main__ import main
+    with pytest.raises(SystemExit):
+        main(["sweep", "--datasets", "nope", "--pop", "8", "--gens", "1"])

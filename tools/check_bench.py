@@ -1,0 +1,160 @@
+#!/usr/bin/env python
+"""Benchmark-artifact check: BENCH_search.json schema + speedup invariants.
+
+`BENCH_search.json` is a committed measurement artifact (benchmarks/ga_bench
+regenerates it); CI validates it without importing repo code so a regressed
+or hand-mangled artifact fails loudly:
+
+  1. schema: the expected sections exist with the expected per-row numeric
+     fields (unknown extra fields are fine — the artifact may grow);
+  2. invariant: `fused_ref_speedup_vs_looped` rows must not regress below
+     1.0. Exception: rows at or past the documented fused-vs-looped
+     arithmetic crossover (DESIGN.md §2 — the block-diagonal zeros stop
+     paying for the saved dispatches around ~165 concatenated comparators)
+     only need to stay above CROSSOVER_MIN_SPEEDUP, because re-measured
+     artifacts legitimately land in the 0.9-1.1 band there;
+  3. invariant: `dispatch_per_generation` rows must show the chunked driver
+     dispatching strictly less often than the looped one (DESIGN.md §9).
+
+Run from the repo root (CI does):  python tools/check_bench.py
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BENCH_PATH = os.path.join(REPO, "BENCH_search.json")
+
+# DESIGN.md §2: vertebral[4] (165 comparators) sits at the crossover where
+# fused-vs-looped hovers around parity across runs (measured 0.87-1.10).
+CROSSOVER_N_COMPARATORS = 160
+CROSSOVER_MIN_SPEEDUP = 0.85
+
+SCHEMA = {
+    "single_tree": {
+        "dataset": str,
+        "n_comparators": int,
+        "us_per_chromosome_ref": float,
+        "us_per_chromosome_kernel": float,
+        "us_per_generation": float,
+    },
+    "forest": {
+        "dataset": str,
+        "n_trees": int,
+        "n_comparators": int,
+        "us_per_chromosome_looped": float,
+        "us_per_chromosome_fused_ref": float,
+        "us_per_chromosome_fused_kernel": float,
+        "fused_ref_speedup_vs_looped": float,
+    },
+    "dispatch_per_generation": {
+        "dataset": str,
+        "pop": int,
+        "n_generations": int,
+        "dispatches_per_run_looped": int,
+        "dispatches_per_run_chunked": int,
+        "us_per_generation_looped": float,
+        "us_per_generation_chunked": float,
+        "chunked_speedup": float,
+    },
+}
+
+
+def check_rows(section: str, rows, errors: list[str]) -> None:
+    want = SCHEMA[section]
+    if not isinstance(rows, list) or not rows:
+        errors.append(f"{section}: expected a non-empty list of rows")
+        return
+    for i, row in enumerate(rows):
+        if not isinstance(row, dict):
+            errors.append(f"{section}[{i}]: expected an object")
+            continue
+        for field, typ in want.items():
+            if field not in row:
+                errors.append(f"{section}[{i}]: missing field {field!r}")
+                continue
+            val = row[field]
+            ok = (isinstance(val, (int, float)) and not isinstance(val, bool)
+                  if typ is float else isinstance(val, typ)
+                  and not isinstance(val, bool))
+            if not ok:
+                errors.append(f"{section}[{i}].{field}: expected "
+                              f"{typ.__name__}, got {type(val).__name__}")
+            elif typ in (int, float) and field != "n_trees" and val < 0:
+                errors.append(f"{section}[{i}].{field}: negative ({val})")
+
+
+def check_speedups(bench: dict, min_speedup: float, errors: list[str]) -> None:
+    for i, row in enumerate(bench.get("forest", [])):
+        if not isinstance(row, dict):
+            continue
+        speedup = row.get("fused_ref_speedup_vs_looped")
+        n = row.get("n_comparators", 0)
+        if not isinstance(speedup, (int, float)):
+            continue
+        floor = (CROSSOVER_MIN_SPEEDUP if n >= CROSSOVER_N_COMPARATORS
+                 else min_speedup)
+        if speedup < floor:
+            where = (f"near-crossover ({n} comparators >= "
+                     f"{CROSSOVER_N_COMPARATORS})"
+                     if n >= CROSSOVER_N_COMPARATORS else
+                     f"below crossover ({n} comparators)")
+            errors.append(
+                f"forest[{i}] ({row.get('dataset')}[{row.get('n_trees')}]): "
+                f"fused_ref_speedup_vs_looped={speedup:.3f} < {floor} "
+                f"({where}) — the fused multi-tree path regressed vs the "
+                f"looped oracle (DESIGN.md §2)")
+    for i, row in enumerate(bench.get("dispatch_per_generation", [])):
+        if not isinstance(row, dict):
+            continue
+        looped = row.get("dispatches_per_run_looped")
+        chunked = row.get("dispatches_per_run_chunked")
+        if (isinstance(looped, int) and isinstance(chunked, int)
+                and chunked >= looped):
+            errors.append(
+                f"dispatch_per_generation[{i}]: chunked dispatches "
+                f"({chunked}) not below looped ({looped}) — the §9 "
+                f"device-resident loop regressed")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--path", default=BENCH_PATH)
+    ap.add_argument("--min-speedup", type=float, default=1.0,
+                    help="floor for below-crossover fused speedup rows")
+    args = ap.parse_args(argv)
+
+    try:
+        with open(args.path) as f:
+            bench = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"check_bench: cannot read {args.path}: {e}")
+        return 1
+
+    errors: list[str] = []
+    if not isinstance(bench.get("backend"), str):
+        errors.append("top-level 'backend' must be a string")
+    for section in SCHEMA:
+        if section not in bench:
+            errors.append(f"missing section {section!r}")
+        else:
+            check_rows(section, bench[section], errors)
+    if not errors:
+        check_speedups(bench, args.min_speedup, errors)
+
+    if errors:
+        print(f"check_bench: {args.path} FAILED:")
+        for e in errors:
+            print(f"  - {e}")
+        return 1
+    n_rows = sum(len(bench[s]) for s in SCHEMA)
+    print(f"check_bench: OK ({n_rows} rows; fused speedups and §9 dispatch "
+          f"counts within bounds)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -85,7 +85,16 @@ def main() -> None:
              f"dispatches={r['dispatches_per_run_looped']}->"
              f"{r['dispatches_per_run_chunked']};"
              f"speedup={r['chunked_speedup']:.2f}x")
-    artifact = ga_bench.write_artifact(ga_rows, forest_rows, dispatch_rows)
+    # ---- fused fitness pipeline (DESIGN.md §12) --------------------------
+    fitness_rows = ga_bench.run_fitness_pipeline(pop=pop)
+    for r in fitness_rows:
+        _row(f"ga.fitness_{r['dataset']}[{r['n_trees']}]",
+             r["us_per_generation_hoisted"],
+             f"seed_gen_us={r['us_per_generation_seed']:.1f};"
+             f"hoisted_speedup={r['hoisted_generation_speedup']:.2f}x;"
+             f"hbm_write_reduction={r['hbm_write_reduction']:.0f}x")
+    artifact = ga_bench.write_artifact(ga_rows, forest_rows, dispatch_rows,
+                                       fitness_rows)
     _row("ga.artifact", 0.0, f"path={artifact}")
 
     # ---- kernel microbenches ---------------------------------------------

@@ -16,6 +16,7 @@ import numpy as np
 from repro.core import quant
 from repro.core.tree import ParallelTree, concatenate_ptrees
 from repro.kernels import domination as _dom
+from repro.kernels import fitness as _fit
 from repro.kernels import qmatmul as _qmm
 from repro.kernels import tree_infer as _ti
 
@@ -97,15 +98,29 @@ def prepare_tree_operands(pt: ParallelTree, n_features: int):
     return prepare_forest_operands([pt], n_features)
 
 
-def decode_population(threshold, genes):
-    """Per-chromosome kernel operands from real-coded genes.
+def decode_population_full(threshold, genes):
+    """ONE gene decode shared by the accuracy and area terms (DESIGN.md §12).
 
-    threshold (N,) float; genes (P, 2N). Returns scale (P, N), thr (P, N) f32.
+    threshold (N,) float; genes (P, 2N). Returns (scale, t_sub, bits), all
+    (P, N): the comparator shift scales (f32), the substituted integer
+    thresholds (int32 — index the area LUT directly, cast to f32 for the
+    kernel), and the decoded precisions (int32). Historically the kernel
+    fitness decoded twice — once for scale/thr, once more for the area LUT
+    index — doubling the per-chromosome decode work.
     """
     bits, margin = quant.decode_genes(genes)                  # (P, N) each
     t_int = quant.threshold_to_int(threshold[None, :], bits)
     t_sub = quant.substitute(t_int, margin, bits)
     scale = jnp.exp2(-(8 - bits).astype(jnp.float32))
+    return scale, t_sub, bits
+
+
+def decode_population(threshold, genes):
+    """Per-chromosome kernel operands from real-coded genes.
+
+    threshold (N,) float; genes (P, 2N). Returns scale (P, N), thr (P, N) f32.
+    """
+    scale, t_sub, _ = decode_population_full(threshold, genes)
     return scale, t_sub.astype(jnp.float32)
 
 
@@ -129,18 +144,100 @@ def tree_infer_predict(x8, pt_operands, scale, thr, *, block_b=256,
     # padded comparators must never fire: thr pad = 256 > any x_p
     thr = _pad_to(thr, n, 1, value=256.0)[:, :n]
     if block_l is not None:
-        # round down to a 128-multiple that divides the padded leaf axis, so
-        # one configured tile size works for any forest size (128 always
-        # divides the padded L)
-        l_pad = path_t.shape[1]
-        block_l = max(128, (min(block_l, l_pad) // 128) * 128)
-        while l_pad % block_l:
-            block_l -= 128
+        block_l = _fit_block_l(path_t.shape[1], block_l)
     scores = _ti.tree_infer_scores(
         x8f, sel, scale, thr, path_t, target, cls1h,
         block_b=block_b, block_l=block_l, interpret=interpret,
     )
     return jnp.argmax(scores[:, : x8.shape[0], :], axis=-1)
+
+
+def _fit_block_l(l_pad: int, block_l: int) -> int:
+    """Round ``block_l`` down to a 128-multiple that divides the padded leaf
+    axis, so one configured tile size works for any forest size (128 always
+    divides the padded L)."""
+    block_l = max(128, (min(block_l, l_pad) // 128) * 128)
+    while l_pad % block_l:
+        block_l -= 128
+    return block_l
+
+
+# ---------------------------------------------------------------------------
+# fitness (fused fitness pipeline, DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+def prepare_fitness_operands(x_sel, y, path, path_len, n_neg,
+                             leaf_class, n_classes: int):
+    """Hoisted, padded operands for the fused fitness kernel.
+
+    ``x_sel`` is the chromosome-invariant gather ``x8[:, feature]`` already
+    hoisted onto the problem (`SearchProblem.x_sel` / `PaddedProblem.x_sel`,
+    DESIGN.md §12) — it replaces the one-hot ``X8 @ SEL`` matmul that
+    `tree_infer_scores` re-runs in every grid cell, and the per-chromosome
+    comparator eval becomes a pure broadcast compare. Padding is
+    correctness-preserving exactly as in `prepare_operands`: padded
+    comparator columns are neutralized by the thr = 256 row padding applied
+    in `fitness_errors`, padded leaves carry the unsatisfiable target -1,
+    padded classes receive no votes.
+
+    Returns ``(x_sel, path_t, target, cls1h, y_row)`` — `x_sel` (B, N) f32,
+    `y_row` (1, B) f32 — with N/L/C padded to 128 multiples; the batch axis
+    is padded at call time (it depends on ``block_b``).
+    """
+    path = np.asarray(path)
+    path_len = np.asarray(path_len)
+    n_neg = np.asarray(n_neg)
+    leaf_class = np.asarray(leaf_class)
+    l, n = path.shape
+    x_sel = np.asarray(x_sel).astype(np.float32)
+    path_t = path.T.astype(np.float32)                          # (N, L)
+    target = (path_len - n_neg).astype(np.float32)[None]        # (1, L)
+    cls1h = np.zeros((l, n_classes), np.float32)
+    cls1h[np.arange(l), leaf_class] = 1.0
+
+    x_sel = _pad_to(jnp.asarray(x_sel), 128, 1)
+    path_t = _pad_to(_pad_to(jnp.asarray(path_t), 128, 0), 128, 1)
+    target = _pad_to(jnp.asarray(target), 128, 1, value=-1.0)
+    cls1h = _pad_to(_pad_to(jnp.asarray(cls1h), 128, 0), 128, 1)
+    y_row = jnp.asarray(np.asarray(y).astype(np.float32))[None]  # (1, B)
+    return x_sel, path_t, target, cls1h, y_row
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_p", "block_b", "block_l", "interpret")
+)
+def fitness_errors(fit_operands, scale, thr, *, block_p=8, block_b=256,
+                   block_l=None, interpret=None):
+    """(P,) misclassified-sample counts for a population of trees/forests.
+
+    `fit_operands` from `prepare_fitness_operands` (N/L/C already padded);
+    scale/thr (P, N-padded-able) f32. Handles ragged edges internally: the
+    batch axis pads to ``block_b`` with label -1 rows (never counted
+    correct), the population axis pads to ``block_p`` with inert rows that
+    are cropped from the result. One kernel launch computes the whole
+    population x test-set x forest product and writes only the O(P)
+    accumulator to HBM — `argmax(tree_infer_scores) != y` is the bit-exact
+    materializing oracle (DESIGN.md §12).
+    """
+    interpret = _auto_interpret() if interpret is None else interpret
+    x_sel, path_t, target, cls1h, y_row = fit_operands
+    n_pop = scale.shape[0]
+    n = x_sel.shape[1]
+    x_sel_p = _pad_to(x_sel, block_b, 0)
+    y_p = _pad_to(y_row, block_b, 1, value=-1.0)
+    scale_p = _pad_to(_pad_to(scale, n, 1)[:, :n], block_p, 0)
+    # padded comparators / chromosomes must never fire: thr pad = 256 > x_p
+    thr_p = _pad_to(_pad_to(thr, n, 1, value=256.0)[:, :n],
+                    block_p, 0, value=256.0)
+    if block_l is not None:
+        block_l = _fit_block_l(path_t.shape[1], block_l)
+    counts = _fit.fitness_errors(
+        x_sel_p, scale_p, thr_p, path_t, target, cls1h, y_p,
+        block_p=block_p, block_b=block_b, block_l=block_l,
+        interpret=interpret,
+    )
+    n_valid = jnp.sum((y_row >= 0).astype(jnp.float32))
+    return n_valid - counts[:n_pop, 0]
 
 
 # ---------------------------------------------------------------------------

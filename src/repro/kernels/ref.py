@@ -19,6 +19,23 @@ def tree_infer_scores(x8f, sel, scale, thr, path_t, target, cls1h):
     return jnp.einsum("pbl,lc->pbc", sat, cls1h)
 
 
+def fitness_correct_counts(x_sel, scale, thr, path_t, target, cls1h, y):
+    """Oracle for kernels.fitness.fitness_errors. Same padded operands.
+
+    x_sel (B, N) f32 hoisted gathered codes; scale/thr (P, N); path_t (N, L);
+    target (1, L); cls1h (L, C); y (1, B) f32 labels (-1 on padded rows).
+    Returns (P,) f32 correct-sample counts (the kernel's lane-replicated
+    accumulator collapsed to one lane).
+    """
+    x_p = jnp.floor(x_sel[None] * scale[:, None, :])      # (P, B, N)
+    d = (x_p > thr[:, None, :]).astype(jnp.float32)
+    score = jnp.einsum("pbn,nl->pbl", d, path_t)
+    sat = (score == target[None]).astype(jnp.float32)
+    votes = jnp.einsum("pbl,lc->pbc", sat, cls1h)
+    pred = jnp.argmax(votes, axis=-1).astype(jnp.float32)  # (P, B)
+    return jnp.sum((pred == y).astype(jnp.float32), axis=-1)
+
+
 def domination_matrix(objs):
     """Oracle for kernels.domination.domination_matrix. objs (P, M) -> f32."""
     a = objs[:, None, :]

@@ -147,6 +147,9 @@ def main(argv=None) -> None:
                          "a joint 2*sum(N_k)-gene chromosome")
     ap.add_argument("--backend", default="reference",
                     choices=list(search.BACKENDS))
+    ap.add_argument("--block-p", type=int, default=8,
+                    help="kernel backend: chromosomes per fused-fitness grid "
+                         "cell (population-axis tile, DESIGN.md §12)")
     ap.add_argument("--pop", type=int, default=64)
     ap.add_argument("--gens", type=int, default=40)
     ap.add_argument("--seed", type=int, default=0)
@@ -193,8 +196,8 @@ def main(argv=None) -> None:
           f"power={area.power_mw(problem.exact_area_mm2):.2f}mW ==")
 
     cfg = search.SearchConfig(
-        backend=args.backend, pop_size=args.pop, n_generations=args.gens,
-        seed=args.seed, out_dir=args.out,
+        backend=args.backend, block_p=args.block_p, pop_size=args.pop,
+        n_generations=args.gens, seed=args.seed, out_dir=args.out,
         checkpoint_every=args.checkpoint_every, resume=args.resume,
         migrate_every=args.migrate_every, n_migrate=args.n_migrate,
         emit_rtl=args.emit_rtl, verify_rtl=args.verify_rtl,

@@ -1,4 +1,4 @@
-"""Pluggable fitness backends over a `SearchProblem` (DESIGN.md §7).
+"""Pluggable fitness backends over a `SearchProblem` (DESIGN.md §7, §12).
 
 Every backend maps a population of real-coded genes (P, 2N) to objectives
 (P, 2) = (accuracy loss vs exact design, normalized area), bit-compatible
@@ -6,11 +6,20 @@ with each other:
 
   reference — pure-jnp vmap of the block-diagonal super-tree dataflow; the
               portable oracle (and what `core.approx.make_fitness_fn`
-              historically computed for K=1).
-  kernel    — the fused Pallas `tree_infer` program: the whole
-              population x test-set x forest evaluation is ONE kernel launch
-              (grid = population x batch-blocks x leaf-blocks), replacing
-              the K-iteration per-tree Python loop of the old forest path.
+              historically computed for K=1). Rides the hoisted fitness
+              pipeline (§12): the chromosome-invariant feature gather is
+              precomputed on the problem (`SearchProblem.x_sel`) and ONE
+              gene decode feeds both objectives.
+  kernel    — the fused Pallas *fitness* kernel (`kernels.fitness`): the
+              whole population x test-set x forest evaluation is ONE launch
+              (grid = pop-blocks x batch-blocks x leaf-blocks, `block_p`
+              chromosomes per cell), votes -> argmax -> label-compare happen
+              inside the kernel, and only the O(P) per-chromosome error
+              counts reach HBM — the (P, B, C) vote tensor the historical
+              `tree_infer_scores` path materialized stays on-chip. That
+              scores path remains the bit-exact materializing oracle
+              (`kernels.ops.tree_infer_predict`, asserted in tests and used
+              by the §10 RTL verification triangle).
   islands   — not a fitness function but a *driver* strategy (per-device
               NSGA-II islands with ring migration, `core.dist`); it reuses
               the reference fitness per island, is selected through
@@ -18,8 +27,9 @@ with each other:
               chunked-scan checkpoint/resume machinery (DESIGN.md §9).
 
 The accuracy term of `reference` and `kernel` agree bit-exactly: every
-integer quantity is exact in f32 (< 2^24) and vote accumulation adds small
-exact integers (see `repro.kernels.tree_infer`).
+integer quantity is exact in f32 (< 2^24), the kernel's on-chip reductions
+add small exact integers, and both divide the same exact correct count by
+the same sample count (see `repro.kernels.fitness`).
 """
 from __future__ import annotations
 
@@ -28,7 +38,6 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core import quant
 from repro.search.problem import SearchProblem, objectives
 
 BACKENDS = ("reference", "kernel", "islands")
@@ -44,30 +53,39 @@ def make_reference_fitness(problem: SearchProblem):
     return fitness
 
 
-def make_kernel_fitness(problem: SearchProblem, *, block_b: int = 256,
-                        block_l: int | None = None,
+def make_kernel_fitness(problem: SearchProblem, *, block_p: int = 8,
+                        block_b: int = 256, block_l: int | None = None,
                         interpret: bool | None = None):
     """Kernel-backed fitness: accuracy via ONE fused Pallas launch for the
     entire (population x test-set x forest) product, area via the LUT gather.
-    Same objectives as `make_reference_fitness` — asserted equal in tests."""
+    Same objectives as `make_reference_fitness` — asserted equal in tests.
+
+    `block_p` tiles the population axis (DESIGN.md §12): each grid cell
+    evaluates a (block_p, N) slab of chromosomes against a (block_b, N)
+    batch tile, amortizing the static operands over the slab and keeping
+    the VPU sublanes dense.
+    """
     from repro.kernels import ops as kops  # local import: kernels are optional
 
-    # problem.path is already the block-diagonal super-tree layout.
-    operands = kops.prepare_operands(
-        problem.feature, problem.path, problem.path_len, problem.n_neg,
-        problem.leaf_class, problem.n_classes, problem.n_features)
+    # problem.path is already the block-diagonal super-tree layout;
+    # problem.x_sel is the feature gather, hoisted once at problem build —
+    # the kernel never re-runs it per grid cell (§12).
+    fit_operands = kops.prepare_fitness_operands(
+        problem.x_sel, problem.y, problem.path, problem.path_len,
+        problem.n_neg, problem.leaf_class, problem.n_classes)
     threshold = problem.threshold
+    n_samples = jnp.float32(problem.y.shape[0])
 
     @jax.jit
     def fitness(pop):
-        scale, thr = kops.decode_population(threshold, pop)
-        preds = kops.tree_infer_predict(problem.x8, operands, scale, thr,
-                                        block_b=block_b, block_l=block_l,
-                                        interpret=interpret)
-        acc = jnp.mean((preds == problem.y[None, :]).astype(jnp.float32), axis=1)
-        bits, margin = quant.decode_genes(pop)
-        t_int = quant.threshold_to_int(threshold[None, :], bits)
-        t_sub = quant.substitute(t_int, margin, bits)
+        # ONE decode feeds the kernel operands AND the area LUT index
+        # (historically this decoded twice per eval).
+        scale, t_sub, bits = kops.decode_population_full(threshold, pop)
+        errors = kops.fitness_errors(
+            fit_operands, scale, t_sub.astype(jnp.float32),
+            block_p=block_p, block_b=block_b, block_l=block_l,
+            interpret=interpret)
+        acc = (n_samples - errors) / n_samples
         areas = problem.area_lut[problem.lut_offsets[bits] + t_sub].sum(axis=1)
         areas = areas + problem.overhead_mm2
         return jnp.stack(

@@ -47,6 +47,7 @@ class SearchConfig:
     seed: int = 0
     seed_exact: bool = True         # inject the exact design into the init pop
     # kernel backend
+    block_p: int = 8                # population-axis tile (DESIGN.md §12)
     block_b: int = 256
     block_l: int | None = None
     interpret: bool | None = None   # None = auto (interpret off TPU)
@@ -346,8 +347,8 @@ def run_search(problem: SearchProblem, cfg: SearchConfig | None = None,
     else:
         kw = {}
         if cfg.backend == "kernel":
-            kw = dict(block_b=cfg.block_b, block_l=cfg.block_l,
-                      interpret=cfg.interpret)
+            kw = dict(block_p=cfg.block_p, block_b=cfg.block_b,
+                      block_l=cfg.block_l, interpret=cfg.interpret)
         fitness = _backends.make_fitness(problem, cfg.backend, **kw)
         state, n_evals, n_dispatches = _run_single(problem, cfg, fitness)
     wall_s = time.time() - t0

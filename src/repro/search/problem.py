@@ -50,6 +50,9 @@ class SearchProblem:
     leaf_class: jnp.ndarray   # (L,) int32
     leaf_tree: jnp.ndarray    # (L,) int32   owning tree per leaf
     x8: jnp.ndarray           # (B, F) int32 master codes (test set)
+    x_sel: jnp.ndarray        # (B, N) int32 hoisted x8[:, feature] — the
+                              #   chromosome-invariant feature gather,
+                              #   computed once per problem (DESIGN.md §12)
     y: jnp.ndarray            # (B,) int32
     area_lut: jnp.ndarray     # flat LUT (mm^2)
     lut_offsets: jnp.ndarray  # (MAX_BITS+1,) int32
@@ -83,7 +86,7 @@ jax.tree_util.register_pytree_node(
     SearchProblem,
     lambda p: (
         (p.feature, p.threshold, p.path, p.path_len, p.n_neg, p.leaf_class,
-         p.leaf_tree, p.x8, p.y, p.area_lut, p.lut_offsets),
+         p.leaf_tree, p.x8, p.x_sel, p.y, p.area_lut, p.lut_offsets),
         (p.overhead_mm2, p.exact_area_mm2, p.exact_accuracy, p.n_classes,
          p.n_features, p.n_trees, p.tree_comparators, p.tree_leaves),
     ),
@@ -108,9 +111,13 @@ def predict_votes(problem: SearchProblem, bits, t_sub):
     Exactly one leaf per tree satisfies its path, so `sat @ CLS1H` counts one
     vote per tree per class; for K=1 the votes are the predicted class's
     one-hot and this reduces bit-exactly to single-tree leaf decode.
+
+    The feature gather is hoisted: `problem.x_sel` is the chromosome-
+    invariant `x8[:, feature]`, computed once at problem build, so the
+    per-chromosome work starts at the precision shift + broadcast compare
+    (DESIGN.md §12).
     """
-    x_gathered = problem.x8[:, problem.feature]              # (B, N)
-    x_p = quant.inputs_at_precision(x_gathered, bits)
+    x_p = quant.inputs_at_precision(problem.x_sel, bits)
     d = (x_p > t_sub[None, :]).astype(jnp.float32)
     score = d @ problem.path.T.astype(jnp.float32)           # (B, L)
     target = (problem.path_len - problem.n_neg).astype(jnp.float32)
@@ -134,9 +141,18 @@ def chromosome_area_mm2(problem: SearchProblem, genes):
 
 
 def objectives(problem: SearchProblem, genes):
-    """(accuracy_loss vs exact, normalized area) — both minimized."""
-    acc = chromosome_accuracy(problem, genes)
-    area = chromosome_area_mm2(problem, genes)
+    """(accuracy_loss vs exact, normalized area) — both minimized.
+
+    ONE shared gene decode feeds both objectives (DESIGN.md §12): the
+    accuracy term consumes (bits, t_sub) for the comparator eval, the area
+    term reuses the same pair as the LUT index — historically each objective
+    decoded the chromosome independently, doubling the decode work per eval.
+    """
+    bits, t_sub = decode_chromosome(problem, genes)
+    pred = predict_votes(problem, bits, t_sub)
+    acc = jnp.mean((pred == problem.y).astype(jnp.float32))
+    idx = problem.lut_offsets[bits] + t_sub
+    area = problem.area_lut[idx].sum() + problem.overhead_mm2
     return jnp.stack([problem.exact_accuracy - acc,
                       area / problem.exact_area_mm2])
 
@@ -184,6 +200,7 @@ def build_problem(ptrees, x_test: np.ndarray, y_test: np.ndarray,
         leaf_class=jnp.asarray(leaf_class),
         leaf_tree=jnp.asarray(leaf_tree),
         x8=jnp.asarray(x8),
+        x_sel=jnp.asarray(x8[:, feature]),
         y=jnp.asarray(y_test.astype(np.int32)),
         area_lut=jnp.asarray(lut),
         lut_offsets=jnp.asarray(offsets),

@@ -96,6 +96,8 @@ class PaddedProblem:
     n_neg: jnp.ndarray           # (Lp,) int32
     leaf_onehot: jnp.ndarray     # (Lp, Cp) float32
     x8: jnp.ndarray              # (Bp, Fp) int32
+    x_sel: jnp.ndarray           # (Bp, Np) int32 hoisted x8[:, feature]
+                                 #   (chromosome-invariant, DESIGN.md §12)
     y: jnp.ndarray               # (Bp,) int32 (-1 on padded rows)
     comp_valid: jnp.ndarray      # (Np,) bool
     n_valid: jnp.ndarray         # () float32 — real test-sample count
@@ -170,6 +172,7 @@ def pad_problem(problem: SearchProblem,
         n_neg=jnp.asarray(n_neg),
         leaf_onehot=jnp.asarray(leaf_onehot),
         x8=jnp.asarray(x8),
+        x_sel=jnp.asarray(x8[:, feature]),
         y=jnp.asarray(y),
         comp_valid=jnp.asarray(comp_valid),
         n_valid=jnp.float32(b),
@@ -185,17 +188,16 @@ def pad_problem(problem: SearchProblem,
 # padded evaluation (mirrors search.problem's reference primitives)
 # ---------------------------------------------------------------------------
 
-def padded_predict(pp: PaddedProblem, genes):
-    """(Bp,) voted class per sample — §2's dataflow on padded operands.
-
-    On the real sample rows this is bit-exact vs `problem.predict_votes`
-    with the real gene slice (tests pin it): every padded contribution is
-    structurally zero, and all reductions are integer-valued in f32.
-    """
+def _padded_decode(pp: PaddedProblem, genes):
+    """ONE gene decode shared by predictions and the area term (§12)."""
     bits, margin = quant.decode_genes(genes)
     t_int = quant.threshold_to_int(pp.threshold, bits)
-    t_sub = quant.substitute(t_int, margin, bits)
-    x_p = quant.inputs_at_precision(pp.x8[:, pp.feature], bits)
+    return bits, quant.substitute(t_int, margin, bits)
+
+
+def _padded_predict_decoded(pp: PaddedProblem, bits, t_sub):
+    """(Bp,) voted class from an already-decoded chromosome."""
+    x_p = quant.inputs_at_precision(pp.x_sel, bits)
     d = (x_p > t_sub[None, :]).astype(jnp.float32)
     score = d @ pp.path.T.astype(jnp.float32)
     target = (pp.path_len - pp.n_neg).astype(jnp.float32)
@@ -204,19 +206,31 @@ def padded_predict(pp: PaddedProblem, genes):
     return jnp.argmax(votes, axis=1)
 
 
+def padded_predict(pp: PaddedProblem, genes):
+    """(Bp,) voted class per sample — §2's dataflow on padded operands.
+
+    On the real sample rows this is bit-exact vs `problem.predict_votes`
+    with the real gene slice (tests pin it): every padded contribution is
+    structurally zero, and all reductions are integer-valued in f32. The
+    feature gather is hoisted onto the context (`pp.x_sel`, §12), so the
+    per-chromosome work starts at the precision shift.
+    """
+    bits, t_sub = _padded_decode(pp, genes)
+    return _padded_predict_decoded(pp, bits, t_sub)
+
+
 def padded_objectives(pp: PaddedProblem, genes):
     """(accuracy loss, normalized area) for one padded chromosome (2*Np,).
 
     Matches `search.objectives` on the real slice up to float rounding (the
     area term sums integer quanta instead of f32 mm^2 rows — that is what
     buys vmap-order invariance); the *inertness* of pad genes is exact.
+    One shared decode feeds both objectives (§12).
     """
-    pred = padded_predict(pp, genes)
+    bits, t_sub = _padded_decode(pp, genes)
+    pred = _padded_predict_decoded(pp, bits, t_sub)
     acc = jnp.sum((pred == pp.y).astype(jnp.float32)) / pp.n_valid
 
-    bits, margin = quant.decode_genes(genes)
-    t_sub = quant.substitute(
-        quant.threshold_to_int(pp.threshold, bits), margin, bits)
     idx = pp.lut_offsets[bits] + t_sub
     units = jnp.where(pp.comp_valid, pp.area_lut_units[idx], 0.0).sum()
     area = units * area_mod.AREA_QUANTUM_MM2 + pp.overhead_mm2

@@ -14,7 +14,21 @@ or hand-mangled artifact fails loudly:
      only need to stay above CROSSOVER_MIN_SPEEDUP, because re-measured
      artifacts legitimately land in the 0.9-1.1 band there;
   3. invariant: `dispatch_per_generation` rows must show the chunked driver
-     dispatching strictly less often than the looped one (DESIGN.md §9).
+     dispatching strictly less often than the looped one (DESIGN.md §9);
+  4. invariant: `fitness_pipeline` rows (DESIGN.md §12) must show the fused
+     kernel's analytic HBM write traffic at least HBM_MIN_REDUCTION below
+     the materializing path (deterministic — checked even in --smoke), the
+     fused fitness kernel must actually beat the materializing scores path
+     (FUSED_KERNEL_MIN_SPEEDUP — it measures 1.6-2.6x), and timing-stable
+     rows (work >= FITNESS_FLOOR_MIN_WORK) must keep the hoisted-reference
+     generation speedup inside the FITNESS_MIN_SPEEDUP no-regression band
+     — small rows are dispatch/noise-bound on CPU, same reasoning as the
+     crossover band.
+
+`--smoke` validates a freshly-measured artifact in CI: schema + the
+deterministic invariants only (timing floors are meaningless on a shared
+runner), and sections absent from the artifact are allowed (the smoke bench
+emits only `fitness_pipeline`).
 
 Run from the repo root (CI does):  python tools/check_bench.py
 """
@@ -32,6 +46,25 @@ BENCH_PATH = os.path.join(REPO, "BENCH_search.json")
 # fused-vs-looped hovers around parity across runs (measured 0.87-1.10).
 CROSSOVER_N_COMPARATORS = 160
 CROSSOVER_MIN_SPEEDUP = 0.85
+
+# DESIGN.md §12: the hoisted-reference speedup floor applies to rows with
+# enough per-generation work (n_samples * n_comparators) that CPU timing is
+# stable; below it generations run ~1ms and the ratio is scheduler noise.
+# Even at scale the CPU ratio hovers near parity (measured 0.95-1.05 across
+# regenerations: XLA constant-folds much of the hoisted work off-TPU), so
+# 0.9 is a no-regression band — the structural win the section exists for
+# is the kernel path's deterministic HBM floor below.
+FITNESS_FLOOR_MIN_WORK = 50_000
+FITNESS_MIN_SPEEDUP = 0.9
+# The fused kernel has beaten the materializing scores path by 1.6-2.6x in
+# every measurement (fewer grid cells, no (P, B, C) round-trip); 1.0 is the
+# hard "must actually be a speedup" floor.
+FUSED_KERNEL_MIN_SPEEDUP = 1.0
+# The fused kernel writes a lane-replicated (P, 128) accumulator instead of
+# the (P, B_pad, C_pad) vote tensor: B_pad >= 256 and C_pad >= 128 make the
+# analytic write reduction >= 256x for every real problem; 8x is a loose,
+# deterministic floor.
+HBM_MIN_REDUCTION = 8.0
 
 SCHEMA = {
     "single_tree": {
@@ -59,6 +92,23 @@ SCHEMA = {
         "us_per_generation_looped": float,
         "us_per_generation_chunked": float,
         "chunked_speedup": float,
+    },
+    "fitness_pipeline": {
+        "dataset": str,
+        "n_trees": int,
+        "n_comparators": int,
+        "n_samples": int,
+        "us_per_fitness_seed_ref": float,
+        "us_per_fitness_hoisted_ref": float,
+        "us_per_generation_seed": float,
+        "us_per_generation_hoisted": float,
+        "hoisted_generation_speedup": float,
+        "us_per_chromosome_scores_kernel": float,
+        "us_per_chromosome_fused_kernel": float,
+        "fused_kernel_speedup_vs_scores": float,
+        "hbm_bytes_per_eval_scores": int,
+        "hbm_bytes_per_eval_fused": int,
+        "hbm_write_reduction": float,
     },
 }
 
@@ -107,6 +157,42 @@ def check_speedups(bench: dict, min_speedup: float, errors: list[str]) -> None:
                 f"fused_ref_speedup_vs_looped={speedup:.3f} < {floor} "
                 f"({where}) — the fused multi-tree path regressed vs the "
                 f"looped oracle (DESIGN.md §2)")
+    floored_rows = 0
+    for i, row in enumerate(bench.get("fitness_pipeline", [])):
+        if not isinstance(row, dict):
+            continue
+        kspeed = row.get("fused_kernel_speedup_vs_scores")
+        if isinstance(kspeed, (int, float)) and kspeed < FUSED_KERNEL_MIN_SPEEDUP:
+            errors.append(
+                f"fitness_pipeline[{i}] ({row.get('dataset')}"
+                f"[{row.get('n_trees')}]): fused_kernel_speedup_vs_scores="
+                f"{kspeed:.3f} < {FUSED_KERNEL_MIN_SPEEDUP} — the §12 fused "
+                f"fitness kernel no longer beats the materializing "
+                f"tree_infer_scores path")
+        speedup = row.get("hoisted_generation_speedup")
+        if not isinstance(speedup, (int, float)):
+            continue
+        work = row.get("n_samples", 0) * row.get("n_comparators", 0)
+        if work < FITNESS_FLOOR_MIN_WORK:
+            continue  # dispatch/noise-bound on CPU (see module docstring)
+        floored_rows += 1
+        if speedup < FITNESS_MIN_SPEEDUP:
+            errors.append(
+                f"fitness_pipeline[{i}] ({row.get('dataset')}"
+                f"[{row.get('n_trees')}]): hoisted_generation_speedup="
+                f"{speedup:.3f} < {FITNESS_MIN_SPEEDUP} at work={work} — "
+                f"the §12 hoisted reference path regressed vs the seed "
+                f"formulation")
+    if bench.get("fitness_pipeline") and floored_rows == 0:
+        errors.append(
+            "fitness_pipeline: no row reaches FITNESS_FLOOR_MIN_WORK="
+            f"{FITNESS_FLOOR_MIN_WORK} — the section must include a "
+            "timing-stable at-scale row (e.g. pendigits)")
+
+
+def check_deterministic(bench: dict, errors: list[str]) -> None:
+    """Floors that do not depend on wall-clock measurements — enforced in
+    --smoke runs too."""
     for i, row in enumerate(bench.get("dispatch_per_generation", [])):
         if not isinstance(row, dict):
             continue
@@ -118,6 +204,24 @@ def check_speedups(bench: dict, min_speedup: float, errors: list[str]) -> None:
                 f"dispatch_per_generation[{i}]: chunked dispatches "
                 f"({chunked}) not below looped ({looped}) — the §9 "
                 f"device-resident loop regressed")
+    for i, row in enumerate(bench.get("fitness_pipeline", [])):
+        if not isinstance(row, dict):
+            continue
+        red = row.get("hbm_write_reduction")
+        scores = row.get("hbm_bytes_per_eval_scores")
+        fused = row.get("hbm_bytes_per_eval_fused")
+        if not all(isinstance(v, (int, float)) for v in (red, scores, fused)):
+            continue
+        if fused > 0 and abs(red - scores / fused) > 1e-6 * red:
+            errors.append(
+                f"fitness_pipeline[{i}]: hbm_write_reduction ({red}) does "
+                f"not match bytes_scores/bytes_fused ({scores}/{fused})")
+        if red < HBM_MIN_REDUCTION:
+            errors.append(
+                f"fitness_pipeline[{i}] ({row.get('dataset')}"
+                f"[{row.get('n_trees')}]): hbm_write_reduction={red:.1f} < "
+                f"{HBM_MIN_REDUCTION} — the §12 fused kernel no longer cuts "
+                f"the O(P·B·C) vote-tensor write traffic")
 
 
 def main(argv=None) -> int:
@@ -125,6 +229,9 @@ def main(argv=None) -> int:
     ap.add_argument("--path", default=BENCH_PATH)
     ap.add_argument("--min-speedup", type=float, default=1.0,
                     help="floor for below-crossover fused speedup rows")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode for freshly-measured artifacts: schema + "
+                         "deterministic floors only, absent sections allowed")
     args = ap.parse_args(argv)
 
     try:
@@ -137,22 +244,30 @@ def main(argv=None) -> int:
     errors: list[str] = []
     if not isinstance(bench.get("backend"), str):
         errors.append("top-level 'backend' must be a string")
+    checked = 0
     for section in SCHEMA:
-        if section not in bench:
-            errors.append(f"missing section {section!r}")
-        else:
-            check_rows(section, bench[section], errors)
+        if section not in bench or (args.smoke and not bench.get(section)):
+            if not args.smoke:
+                errors.append(f"missing section {section!r}")
+            continue
+        check_rows(section, bench[section], errors)
+        checked += 1
+    if args.smoke and checked == 0:
+        errors.append("no known sections present")
     if not errors:
-        check_speedups(bench, args.min_speedup, errors)
+        check_deterministic(bench, errors)
+        if not args.smoke:
+            check_speedups(bench, args.min_speedup, errors)
 
     if errors:
         print(f"check_bench: {args.path} FAILED:")
         for e in errors:
             print(f"  - {e}")
         return 1
-    n_rows = sum(len(bench[s]) for s in SCHEMA)
-    print(f"check_bench: OK ({n_rows} rows; fused speedups and §9 dispatch "
-          f"counts within bounds)")
+    n_rows = sum(len(bench.get(s) or []) for s in SCHEMA)
+    mode = "smoke: deterministic floors" if args.smoke else \
+        "fused/hoisted speedups, §9 dispatch counts and §12 HBM floors"
+    print(f"check_bench: OK ({n_rows} rows; {mode} within bounds)")
     return 0
 
 

@@ -16,6 +16,15 @@ deliberately ladder the comparator count so the fused-vs-looped crossover
 generation loop (DESIGN.md §9) removes: N per-generation jitted dispatches
 vs one `nsga2.make_chunk` lax.scan.
 
+`ga.sharded_*` rows measure the mesh-sharded NSGA-II (DESIGN.md §13) as a
+weak-scaling ladder: the per-shard population slab is held fixed while the
+shard count grows, so each row's per-shard domination work — the (2P, 2P)
+pool pair-comparisons a shard actually evaluates, (2P)²/S rows vs the
+monolithic (2P)² — stays proportional to one device's budget. The work
+split is analytic and floor-checked in CI smoke runs; the whole sharded run
+stays ONE dispatch (a lax.scan over the shard_map'd generation), reported
+per generation alongside the measured wall-clock.
+
 `ga.fitness_*` rows measure the fused fitness pipeline (DESIGN.md §12):
 the pre-§12 generation program (feature gather re-stated per evaluation,
 one decode per objective term, sequential-loop crowding) vs the hoisted
@@ -404,16 +413,97 @@ def run_dispatch(datasets=("seeds",), pop=64, gens=20):
     return rows
 
 
-def write_artifact(tree_rows, forest_rows, dispatch_rows=None,
-                   fitness_rows=None, path=ARTIFACT) -> str:
-    """Emit BENCH_search.json: the search-engine throughput artifact."""
+SHARD_COUNTS = (1, 2, 4, 8)
+
+
+def run_sharded(dataset="seeds", pop_per_shard=32, gens=8,
+                shard_counts=SHARD_COUNTS):
+    """Mesh-sharded NSGA-II weak-scaling rows (DESIGN.md §13).
+
+    Per-shard population held at ``pop_per_shard`` while the shard count
+    grows; the n_shards=1 row is the single-device `nsga2.make_chunk`
+    oracle, every other row the `dist.make_sharded_chunk` shard_map at the
+    same total population. The per-shard domination work columns are
+    analytic — hierarchical domination gives each shard a (2P/S, 2P) row
+    block of the (2P, 2P) pool matrix, an exact S-fold split — and the
+    dispatch columns record that the sharded run is still one lax.scan
+    dispatch for the whole chunk. Shard counts beyond the host device count
+    are skipped (simulate with XLA_FLAGS=--xla_force_host_platform_device_count=8)."""
+    from repro.core import dist
+    from repro.launch.mesh import make_search_mesh
+
+    rows = []
+    built = build_all((dataset,))
+    ds, tree, pt, prob = built[dataset]
+    fitness = search.make_fitness(prob, "reference")
+    n_dev = len(jax.devices())
+    for s in shard_counts:
+        if s > n_dev:
+            print(f"ga.sharded: skipping n_shards={s} "
+                  f"(host has {n_dev} devices)")
+            continue
+        pop = pop_per_shard * s
+        cfg = nsga2.NSGA2Config(pop_size=pop, n_generations=gens)
+        key = jax.random.PRNGKey(0)
+        if s == 1:
+            state = nsga2.init_state(key, fitness, prob.n_genes, cfg)
+            chunk = jax.jit(nsga2.make_chunk(fitness, cfg, gens))
+        else:
+            mesh = make_search_mesh(str(s), axes=("pop",))
+            state = dist.init_sharded(key, fitness, prob.n_genes, mesh, cfg)
+            chunk = dist.make_sharded_chunk(fitness, mesh, cfg, gens)
+        t = _timeit(chunk, state, repeat=3)
+        pool = 2 * pop
+        mono = pool * pool
+        per_shard = mono // s
+        rows.append({
+            "dataset": dataset,
+            "pop": pop,
+            "pop_per_shard": pop_per_shard,
+            "n_shards": s,
+            "n_generations": gens,
+            "dom_pairs_per_gen_monolithic": mono,
+            "dom_pairs_per_gen_per_shard": per_shard,
+            "dom_work_reduction_per_shard": mono / per_shard,
+            "dispatches_per_run": 1,
+            "dispatches_per_generation": 1.0 / gens,
+            "us_per_generation": 1e6 * t / gens,
+        })
+    return rows
+
+
+def write_artifact(tree_rows=None, forest_rows=None, dispatch_rows=None,
+                   fitness_rows=None, sharded_rows=None,
+                   path=ARTIFACT) -> str:
+    """Emit BENCH_search.json: the search-engine throughput artifact.
+
+    Sections passed as None are carried over from an existing artifact at
+    ``path`` (so partial regenerations — `--fitness-only`, `--sharded-only`
+    — don't blank the committed sections they didn't re-measure); absent
+    files start every unmeasured section empty."""
     payload = {
         "backend": jax.default_backend(),
-        "single_tree": tree_rows,
-        "forest": forest_rows,
-        "dispatch_per_generation": dispatch_rows or [],
-        "fitness_pipeline": fitness_rows or [],
+        "single_tree": [],
+        "forest": [],
+        "dispatch_per_generation": [],
+        "fitness_pipeline": [],
+        "sharded_search": [],
     }
+    try:
+        with open(path) as f:
+            prior = json.load(f)
+        for k in payload:
+            if k != "backend" and isinstance(prior.get(k), list):
+                payload[k] = prior[k]
+    except (OSError, json.JSONDecodeError, ValueError):
+        pass
+    for k, rows in (("single_tree", tree_rows), ("forest", forest_rows),
+                    ("dispatch_per_generation", dispatch_rows),
+                    ("fitness_pipeline", fitness_rows),
+                    ("sharded_search", sharded_rows)):
+        if rows is not None:
+            payload[k] = rows
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
     tmp = path + ".tmp"
     with open(tmp, "w") as f:
         json.dump(payload, f, indent=1)
@@ -434,17 +524,37 @@ def _print_fitness_rows(fitness_rows):
               f"({r['hbm_write_reduction']:.0f}x)")
 
 
-def main(quick=False, fitness_only=False, out=None):
-    """``--quick`` shrinks budgets; ``--fitness-only`` runs just the §12
-    fitness-pipeline rows (the CI smoke mode) — with ``--out`` the artifact
-    lands there instead of overwriting the committed BENCH_search.json."""
+def _print_sharded_rows(sharded_rows):
+    for r in sharded_rows:
+        print(f"ga.sharded_{r['dataset']}[S={r['n_shards']}]: "
+              f"pop={r['pop']} "
+              f"dom pairs/gen {r['dom_pairs_per_gen_monolithic']} -> "
+              f"{r['dom_pairs_per_gen_per_shard']}/shard "
+              f"({r['dom_work_reduction_per_shard']:.0f}x); "
+              f"{r['dispatches_per_run']} dispatch/run, "
+              f"{r['us_per_generation']:.1f}us/generation")
+
+
+def main(quick=False, fitness_only=False, sharded_only=False, out=None):
+    """``--quick`` shrinks budgets; ``--fitness-only`` / ``--sharded-only``
+    run just the §12 / §13 rows (the CI smoke modes) — with ``--out`` the
+    artifact lands there instead of the committed BENCH_search.json, and
+    either partial mode carries the unmeasured sections over from whatever
+    artifact already sits at the target path."""
     path_kw = {"path": out} if out else {}
     if fitness_only:
         fitness_rows = run_fitness_pipeline(
             specs=(("seeds", 1), ("seeds", 2)) if quick else FITNESS_SPECS,
             pop=16 if quick else 64)
-        path = write_artifact([], [], None, fitness_rows, **path_kw)
+        path = write_artifact(fitness_rows=fitness_rows, **path_kw)
         _print_fitness_rows(fitness_rows)
+        print(f"artifact: {path}")
+        return
+    if sharded_only:
+        sharded_rows = run_sharded(pop_per_shard=16 if quick else 32,
+                                   gens=4 if quick else 8)
+        path = write_artifact(sharded_rows=sharded_rows, **path_kw)
+        _print_sharded_rows(sharded_rows)
         print(f"artifact: {path}")
         return
     tree_rows = run(datasets=("seeds",) if quick else ("har", "pendigits", "seeds"),
@@ -455,8 +565,10 @@ def main(quick=False, fitness_only=False, out=None):
     fitness_rows = run_fitness_pipeline(
         specs=(("seeds", 1), ("pendigits", 1)) if quick else FITNESS_SPECS,
         pop=32 if quick else 64)
+    sharded_rows = run_sharded(pop_per_shard=16 if quick else 32,
+                               gens=4 if quick else 8)
     path = write_artifact(tree_rows, forest_rows, dispatch_rows, fitness_rows,
-                          **path_kw)
+                          sharded_rows, **path_kw)
     for r in tree_rows:
         print(f"ga.{r['dataset']}: ref={r['us_per_chromosome_ref']:.1f}us "
               f"kernel={r['us_per_chromosome_kernel']:.1f}us /chromosome")
@@ -474,6 +586,7 @@ def main(quick=False, fitness_only=False, out=None):
               f"{r['dispatches_per_run_chunked']} dispatches, "
               f"{r['chunked_speedup']:.2f}x)")
     _print_fitness_rows(fitness_rows)
+    _print_sharded_rows(sharded_rows)
     print(f"artifact: {path}")
 
 
@@ -483,8 +596,13 @@ if __name__ == "__main__":
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--fitness-only", action="store_true",
                     help="only the §12 fitness_pipeline rows (CI smoke)")
+    ap.add_argument("--sharded-only", action="store_true",
+                    help="only the §13 sharded_search rows (CI multi-device "
+                         "smoke; run under "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count=8)")
     ap.add_argument("--out", default=None,
                     help="artifact path (default: the committed "
                          "BENCH_search.json)")
     args = ap.parse_args()
-    main(quick=args.quick, fitness_only=args.fitness_only, out=args.out)
+    main(quick=args.quick, fitness_only=args.fitness_only,
+         sharded_only=args.sharded_only, out=args.out)

@@ -23,20 +23,26 @@ import jax.numpy as jnp
 INF = jnp.inf
 _BIG = 1e9
 
-# Size of the array handed to `non_dominated_sort` at which it routes the
-# pairwise domination matrix through the blocked Pallas kernel
-# (repro.kernels.domination) instead of the pure-jnp broadcast. NOTE: inside
-# the GA step the sorted pool is the combined parent+offspring set (2P), so
-# the kernel engages from pop_size >= DOMINATION_KERNEL_MIN_POP / 2. The jnp
+# Number of *rows* of the domination relation at which `non_dominated_sort`
+# routes through the blocked Pallas kernel (repro.kernels.domination) instead
+# of the pure-jnp broadcast. The row count is the LOCAL population slab: the
+# monolithic sort hands the full pool (rows == columns == pool P, and inside
+# the GA step the pool is the combined parent+offspring set 2P, so the kernel
+# engages from pop_size >= DOMINATION_KERNEL_MIN_POP / 2); the mesh-sharded
+# hierarchical sort hands each shard's (P_local, P_global) row block, so a
+# population sharded 8 ways routes on P/8 — small shards skip the Pallas
+# launch overhead even when the global pool is huge (DESIGN.md §13). The jnp
 # path stays the bit-exact oracle (the matrix is boolean, so "bit-exact" is
 # plain equality) — see DESIGN.md §9.
 DOMINATION_KERNEL_MIN_POP = 512
 
 
-def domination_matrix(objs: jnp.ndarray) -> jnp.ndarray:
-    """objs (P, M), minimized. out[i, j] = True iff i dominates j."""
+def domination_matrix(objs: jnp.ndarray,
+                      against: jnp.ndarray | None = None) -> jnp.ndarray:
+    """objs (Pi, M), minimized. out[i, j] = True iff objs[i] dominates
+    against[j] (default ``against = objs`` — the square pool-vs-pool case)."""
     a = objs[:, None, :]  # i
-    b = objs[None, :, :]  # j
+    b = (objs if against is None else against)[None, :, :]  # j
     return jnp.all(a <= b, axis=-1) & jnp.any(a < b, axis=-1)
 
 
@@ -47,35 +53,45 @@ def _kernel_domination_available() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def _dispatch_domination(objs: jnp.ndarray) -> jnp.ndarray:
-    """Pure-jnp domination below DOMINATION_KERNEL_MIN_POP, Pallas above.
+def _dispatch_domination(objs: jnp.ndarray,
+                         against: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Pure-jnp domination below DOMINATION_KERNEL_MIN_POP rows, Pallas above.
 
-    The population axis is static under jit, so the routing resolves at trace
-    time — no runtime branching inside the compiled program."""
+    Routing is on ``objs.shape[0]`` — the local (post-shard) row count, not
+    the global pool size — so a small per-shard slab of a large sharded pool
+    never pays the kernel's launch overhead. Shapes are static under jit, so
+    the routing resolves at trace time — no runtime branching inside the
+    compiled program."""
     if (objs.shape[0] >= DOMINATION_KERNEL_MIN_POP
             and _kernel_domination_available()):
         try:
             from repro.kernels import ops as _kops
         except ImportError:  # kernels package unavailable: oracle path
-            return domination_matrix(objs)
-        return _kops.domination_matrix_bool(objs)
-    return domination_matrix(objs)
+            return domination_matrix(objs, against)
+        if against is None:
+            return _kops.domination_matrix_bool(objs)
+        return _kops.domination_block_bool(objs, against)
+    return domination_matrix(objs, against)
 
 
-def non_dominated_sort(objs: jnp.ndarray, dom: jnp.ndarray | None = None) -> jnp.ndarray:
-    """Returns integer rank per individual (0 = first/pareto front)."""
-    if dom is None:
-        dom = _dispatch_domination(objs)
-    p = objs.shape[0]
-    n_dominators = dom.sum(axis=0).astype(jnp.int32)  # how many dominate j
+def _peel_fronts(n_dominators: jnp.ndarray, dec_fn) -> jnp.ndarray:
+    """Front-peeling while_loop shared by the monolithic and sharded sorts.
+
+    ``n_dominators`` (P,) int32 — how many pool members dominate each j;
+    ``dec_fn(current)`` — given the (P,) bool mask of the front being peeled,
+    return the (P,) int32 count of dominators each j loses. The monolithic
+    sort reduces its full (P, P) matrix; the sharded sort reduces its local
+    (P_local, P) row block and merges with a psum — integer sums partition
+    exactly over shards, so both produce identical ranks (DESIGN.md §13).
+    """
+    p = n_dominators.shape[0]
 
     def body(state):
         rank, counts, r = state
         current = (counts == 0) & (rank < 0)
         rank = jnp.where(current, r, rank)
         # removing `current` decrements the dominator count of their dominatees
-        dec = (dom & current[:, None]).sum(axis=0).astype(jnp.int32)
-        counts = jnp.where(rank < 0, counts - dec, -1)
+        counts = jnp.where(rank < 0, counts - dec_fn(current), -1)
         return rank, counts, r + 1
 
     def cond(state):
@@ -86,6 +102,18 @@ def non_dominated_sort(objs: jnp.ndarray, dom: jnp.ndarray | None = None) -> jnp
     counts0 = jnp.where(rank0 < 0, n_dominators, -1)
     rank, _, _ = jax.lax.while_loop(cond, body, (rank0, counts0, jnp.int32(0)))
     return rank
+
+
+def non_dominated_sort(objs: jnp.ndarray, dom: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Returns integer rank per individual (0 = first/pareto front)."""
+    if dom is None:
+        dom = _dispatch_domination(objs)
+    n_dominators = dom.sum(axis=0).astype(jnp.int32)  # how many dominate j
+
+    def dec(current):
+        return (dom & current[:, None]).sum(axis=0).astype(jnp.int32)
+
+    return _peel_fronts(n_dominators, dec)
 
 
 def crowding_distance(objs: jnp.ndarray, rank: jnp.ndarray) -> jnp.ndarray:

@@ -6,16 +6,29 @@ for the combined 2P pool every generation. For production population sizes
 the dominant VPU cost; this kernel tiles it (block_i x block_j) in VMEM with
 the (small, static) objective count unrolled.
 
+Two entry points share the kernel body:
+
+  `domination_matrix`  — the square (P, P) relation of one pool against
+                         itself (the monolithic sort path);
+  `domination_block`   — a rectangular (Pi, Pj) slab: rows from one operand
+                         set, columns from another. The mesh-sharded
+                         hierarchical sort (DESIGN.md §13) gives each shard
+                         its local population slab as rows and the
+                         all-gathered pool as columns, so per-shard pairwise
+                         work drops from O(P^2) to O(P^2 / n_shards) while
+                         the row-partitioned matrix stays bit-identical to
+                         the monolithic one.
+
 Output is f32 {0., 1.} — downstream reductions (domination counts) are sums,
 and f32 keeps the 8x128 VPU lanes dense.
 
 Wired into the sort path: on TPU, `core.nsga2.non_dominated_sort` routes
 through this kernel (via `kernels.ops.domination_matrix_bool`, which pads
-internally) whenever the sorted pool reaches
-`nsga2.DOMINATION_KERNEL_MIN_POP`; below that — and everywhere off-TPU,
-where this kernel only runs in the (slow, bit-exact) Pallas interpreter —
-the pure-jnp broadcast, the kernel's oracle, is the right call
-(DESIGN.md §9).
+internally) whenever the *row* operand — the local population slab under
+sharding — reaches `nsga2.DOMINATION_KERNEL_MIN_POP`; below that — and
+everywhere off-TPU, where this kernel only runs in the (slow, bit-exact)
+Pallas interpreter — the pure-jnp broadcast, the kernel's oracle, is the
+right call (DESIGN.md §9, §13).
 """
 from __future__ import annotations
 
@@ -41,16 +54,24 @@ def _kernel(obj_i_ref, obj_j_ref, out_ref, *, n_obj: int):
 
 
 @functools.partial(jax.jit, static_argnames=("block_i", "block_j", "interpret"))
-def domination_matrix(
-    objs,  # (P, M) f32, P % block == 0 after padding
+def domination_block(
+    objs_i,  # (Pi, M) f32, Pi % block_i == 0 after padding
+    objs_j,  # (Pj, M) f32, Pj % block_j == 0 after padding
     *,
     block_i: int = 256,
     block_j: int = 256,
     interpret: bool = False,
 ):
-    """dom (P, P) f32: dom[i, j] = 1 iff i dominates j (minimization)."""
-    p, m = objs.shape
-    grid = (p // block_i, p // block_j)
+    """dom (Pi, Pj) f32: dom[i, j] = 1 iff objs_i[i] dominates objs_j[j].
+
+    The rectangular row-slab form of `domination_matrix`: the grid tiles the
+    two operand sets independently, so a population shard can compute just
+    its rows of the global relation (DESIGN.md §13)."""
+    pi, m = objs_i.shape
+    pj, mj = objs_j.shape
+    if m != mj:
+        raise ValueError(f"objective counts differ: {m} vs {mj}")
+    grid = (pi // block_i, pj // block_j)
     kernel = functools.partial(_kernel, n_obj=m)
     return pl.pallas_call(
         kernel,
@@ -60,6 +81,19 @@ def domination_matrix(
             pl.BlockSpec((block_j, m), lambda i, j: (j, 0)),
         ],
         out_specs=pl.BlockSpec((block_i, block_j), lambda i, j: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((p, p), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((pi, pj), jnp.float32),
         interpret=interpret,
-    )(objs, objs)
+    )(objs_i, objs_j)
+
+
+@functools.partial(jax.jit, static_argnames=("block_i", "block_j", "interpret"))
+def domination_matrix(
+    objs,  # (P, M) f32, P % block == 0 after padding
+    *,
+    block_i: int = 256,
+    block_j: int = 256,
+    interpret: bool = False,
+):
+    """dom (P, P) f32: dom[i, j] = 1 iff i dominates j (minimization)."""
+    return domination_block(objs, objs, block_i=block_i, block_j=block_j,
+                            interpret=interpret)

@@ -244,6 +244,36 @@ def fitness_errors(fit_operands, scale, thr, *, block_p=8, block_b=256,
 # domination
 # ---------------------------------------------------------------------------
 
+def _dom_block_size(p, block):
+    return min(block, max(128, 1 << (p - 1).bit_length()))
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def domination_block(objs_i, objs_j, *, block=256, interpret=None):
+    """(Pi, Pj) f32 rectangular domination slab; accepts any Pi/Pj (pads
+    internally).
+
+    The sharded-sort entry point (DESIGN.md §13): ``objs_i`` is a shard's
+    local population slab (rows), ``objs_j`` the all-gathered pool (columns).
+    Padding rows/columns are +inf objectives — pad rows never dominate
+    anything real, and pad columns (which real rows trivially dominate) are
+    cropped before return.
+    """
+    interpret = _auto_interpret() if interpret is None else interpret
+    pi, pj = objs_i.shape[0], objs_j.shape[0]
+    bi, bj = _dom_block_size(pi, block), _dom_block_size(pj, block)
+    oi = _pad_to(objs_i.astype(jnp.float32), bi, 0, value=jnp.inf)
+    oj = _pad_to(objs_j.astype(jnp.float32), bj, 0, value=jnp.inf)
+    dom = _dom.domination_block(oi, oj, block_i=bi, block_j=bj,
+                                interpret=interpret)
+    return dom[:pi, :pj]
+
+
+def domination_block_bool(objs_i, objs_j, *, interpret=None):
+    """Adapter with the core.nsga2 rectangular signature (bool output)."""
+    return domination_block(objs_i, objs_j, interpret=interpret) > 0.5
+
+
 @functools.partial(jax.jit, static_argnames=("block", "interpret"))
 def domination_matrix(objs, *, block=256, interpret=None):
     """(P, P) f32 domination matrix; accepts any P (pads internally).
@@ -251,14 +281,7 @@ def domination_matrix(objs, *, block=256, interpret=None):
     Padding rows are +inf objectives: they never dominate anything real and
     the returned matrix is cropped back to (P, P).
     """
-    interpret = _auto_interpret() if interpret is None else interpret
-    p = objs.shape[0]
-    blk = min(block, max(128, 1 << (p - 1).bit_length()))
-    objs_p = _pad_to(objs.astype(jnp.float32), blk, 0, value=jnp.inf)
-    dom = _dom.domination_matrix(
-        objs_p, block_i=blk, block_j=blk, interpret=interpret
-    )
-    return dom[:p, :p]
+    return domination_block(objs, objs, block=block, interpret=interpret)
 
 
 def domination_matrix_bool(objs, *, interpret=None):

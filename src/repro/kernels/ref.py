@@ -36,10 +36,13 @@ def fitness_correct_counts(x_sel, scale, thr, path_t, target, cls1h, y):
     return jnp.sum((pred == y).astype(jnp.float32), axis=-1)
 
 
-def domination_matrix(objs):
-    """Oracle for kernels.domination.domination_matrix. objs (P, M) -> f32."""
+def domination_matrix(objs, against=None):
+    """Oracle for kernels.domination.domination_block / domination_matrix.
+
+    objs (Pi, M) rows vs ``against`` (Pj, M) columns (default: objs — the
+    square case) -> (Pi, Pj) f32."""
     a = objs[:, None, :]
-    b = objs[None, :, :]
+    b = (objs if against is None else against)[None, :, :]
     dom = jnp.all(a <= b, axis=-1) & jnp.any(a < b, axis=-1)
     return dom.astype(jnp.float32)
 

@@ -30,3 +30,48 @@ def make_host_mesh(n: int | None = None, axes=("data",)):
     per = n // len(axes) if len(axes) > 1 else n
     shape = tuple([per] * len(axes)) if len(axes) > 1 else (n,)
     return jax.sharding.Mesh(np.array(devs[:int(np.prod(shape))]).reshape(shape), axes)
+
+
+def make_search_mesh(spec: str | None = None, axes=("pop",)):
+    """The one search-mesh constructor behind every `--mesh` knob
+    (DESIGN.md §13) — engine, sweep and islands all route through here.
+
+    ``spec`` grammar (device counts, innermost axis last):
+      - None / "" / "none" -> None: the single-device oracle path;
+      - "auto"             -> all host devices on the LAST axis (leading
+                              axes get extent 1);
+      - "4"                -> 4 devices on the last axis;
+      - "2x4"              -> one extent per axis (len must match ``axes``).
+
+    ``axes`` names the mesh axes: ("pop",) for a single sharded search,
+    ("bucket", "pop") for the sweep's 2-D problems x population layout,
+    ("data",) for the islands ring.
+    """
+    if spec is None or spec in ("", "none"):
+        return None
+    import numpy as np
+    devs = jax.devices()
+    if spec == "auto":
+        shape = (1,) * (len(axes) - 1) + (len(devs),)
+    else:
+        try:
+            dims = tuple(int(s) for s in spec.lower().split("x"))
+        except ValueError:
+            raise ValueError(
+                f"bad mesh spec {spec!r}: want 'auto', 'N' or 'KxN'")
+        if any(d < 1 for d in dims):
+            raise ValueError(f"bad mesh spec {spec!r}: extents must be >= 1")
+        if len(dims) == 1 and len(axes) > 1:
+            dims = (1,) * (len(axes) - 1) + dims
+        if len(dims) != len(axes):
+            raise ValueError(
+                f"mesh spec {spec!r} has {len(dims)} extents for "
+                f"{len(axes)} axes {axes}")
+        shape = dims
+    n = int(np.prod(shape))
+    if n > len(devs):
+        raise ValueError(
+            f"mesh spec {spec!r} needs {n} devices, host has {len(devs)} "
+            f"(simulate more with "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count=N)")
+    return jax.sharding.Mesh(np.array(devs[:n]).reshape(shape), axes)

@@ -1,0 +1,49 @@
+"""Persistent XLA compilation cache for the search CLIs.
+
+The sweep compiles one program per bucket *shape* (DESIGN.md §11) and the
+sharded search one per (mesh, population) layout (§13) — all of them
+re-traced identically run after run. Pointing jax's compilation cache at a
+persistent directory makes the second run of the same campaign skip straight
+to execution; CI keys the directory in the actions cache so the sweep-smoke
+job stops recompiling every bucket shape on every push.
+
+Usage (the `--compilation-cache DIR` CLI flag calls this before any jit):
+
+    from repro.runtime import compile_cache
+    compile_cache.enable("~/.cache/repro-xla")
+
+Gated: jax builds without `jax.experimental.compilation_cache` (or with an
+incompatible API) degrade to a no-op with a warning rather than failing the
+run — the cache is a speedup, never a correctness dependency.
+"""
+from __future__ import annotations
+
+import os
+import warnings
+
+
+def enable(cache_dir: str) -> bool:
+    """Route XLA compilations through a persistent on-disk cache.
+
+    Creates ``cache_dir`` if needed and lowers the size/time thresholds so
+    the search programs (small by LLM standards, expensive to re-trace per
+    bucket shape) actually get cached. Returns True if the cache is active,
+    False if this jax build doesn't support it (no-op, warned)."""
+    cache_dir = os.path.abspath(os.path.expanduser(cache_dir))
+    try:
+        from jax.experimental.compilation_cache import compilation_cache as cc
+    except ImportError:  # pragma: no cover - depends on the jax build
+        warnings.warn("jax.experimental.compilation_cache unavailable; "
+                      "--compilation-cache is a no-op on this jax build")
+        return False
+    os.makedirs(cache_dir, exist_ok=True)
+    try:
+        import jax
+        # cache everything, however small/fast to compile: the sweep's many
+        # bucket shapes are individually cheap but collectively dominant
+        jax.config.update("jax_persistent_cache_min_entry_size_bytes", -1)
+        jax.config.update("jax_persistent_cache_min_compile_time_secs", 0)
+    except Exception:  # older jax: thresholds don't exist -> defaults apply
+        pass
+    cc.set_cache_dir(cache_dir)
+    return True

@@ -62,6 +62,13 @@ def sweep_main(argv=None) -> None:
     ap.add_argument("--serial", action="store_true",
                     help="run the per-problem serial loop (the bit-exact "
                          "oracle the vmapped path is tested against)")
+    ap.add_argument("--mesh", default=None,
+                    help="device mesh spec (DESIGN.md §13): 'KxN' = K-way "
+                         "bucket axis x N-way population axis, 'N'/'auto' = "
+                         "population axis only; default: single device")
+    ap.add_argument("--compilation-cache", default=None, metavar="DIR",
+                    help="persistent XLA compilation cache directory: "
+                         "re-runs skip recompiling every bucket shape")
     ap.add_argument("--emit-rtl", action="store_true",
                     help="write every pareto point's Verilog under "
                          "OUT/<dataset>/rtl/")
@@ -81,6 +88,9 @@ def sweep_main(argv=None) -> None:
     if unknown:
         ap.error(f"unknown datasets: {unknown}; options: "
                  f"{sorted(DATASET_SPECS)}")
+    if args.compilation_cache:
+        from repro.runtime import compile_cache
+        compile_cache.enable(args.compilation_cache)
 
     kind = "tree" if args.trees <= 1 else f"forest[{args.trees}]"
     print(f"== sweep: {len(names)} datasets, {kind} per dataset, "
@@ -91,7 +101,7 @@ def sweep_main(argv=None) -> None:
     cfg = sweep_mod.SweepConfig(
         pop_size=args.pop, n_generations=args.gens, seed=args.seed,
         vmapped=not args.serial, max_buckets=args.max_buckets,
-        out_dir=args.out, emit_rtl=args.emit_rtl,
+        mesh=args.mesh, out_dir=args.out, emit_rtl=args.emit_rtl,
         verify_rtl=args.verify_rtl)
     sweep = sweep_mod.run_sweep(problems, cfg)
 
@@ -147,6 +157,12 @@ def main(argv=None) -> None:
                          "a joint 2*sum(N_k)-gene chromosome")
     ap.add_argument("--backend", default="reference",
                     choices=list(search.BACKENDS))
+    ap.add_argument("--mesh", default=None,
+                    help="device mesh spec (DESIGN.md §13): 'N' or 'auto' "
+                         "shards the population axis over N / all devices "
+                         "(islands: the ring size); default: single device")
+    ap.add_argument("--compilation-cache", default=None, metavar="DIR",
+                    help="persistent XLA compilation cache directory")
     ap.add_argument("--block-p", type=int, default=8,
                     help="kernel backend: chromosomes per fused-fitness grid "
                          "cell (population-axis tile, DESIGN.md §12)")
@@ -177,6 +193,9 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
     if (args.emit_rtl or args.verify_rtl) and not args.out:
         ap.error("--emit-rtl/--verify-rtl require --out")
+    if args.compilation_cache:
+        from repro.runtime import compile_cache
+        compile_cache.enable(args.compilation_cache)
 
     ds = load_dataset(args.dataset)
     if args.trees <= 1:
@@ -197,7 +216,8 @@ def main(argv=None) -> None:
 
     cfg = search.SearchConfig(
         backend=args.backend, block_p=args.block_p, pop_size=args.pop,
-        n_generations=args.gens, seed=args.seed, out_dir=args.out,
+        n_generations=args.gens, seed=args.seed, mesh=args.mesh,
+        out_dir=args.out,
         checkpoint_every=args.checkpoint_every, resume=args.resume,
         migrate_every=args.migrate_every, n_migrate=args.n_migrate,
         emit_rtl=args.emit_rtl, verify_rtl=args.verify_rtl,

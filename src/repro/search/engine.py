@@ -46,6 +46,13 @@ class SearchConfig:
     n_generations: int = 40
     seed: int = 0
     seed_exact: bool = True         # inject the exact design into the init pop
+    # mesh sharding (DESIGN.md §13): a `launch.mesh.make_search_mesh` spec
+    # (None = single-device oracle; "auto"/"4" shard the population axis;
+    # islands interpret it as the ring size). Orthogonal to `backend`: the
+    # reference and kernel fitness paths both run per-shard unmodified, and
+    # checkpoints stay mesh-agnostic ("single" family) so a run can resume
+    # onto a different mesh — or none — bit-exactly.
+    mesh: str | None = None
     # kernel backend
     block_p: int = 8                # population-axis tile (DESIGN.md §12)
     block_b: int = 256
@@ -184,17 +191,30 @@ def _restore_template(problem: SearchProblem, cfg: SearchConfig):
     )
 
 
-def _run_single(problem: SearchProblem, cfg: SearchConfig, fitness):
+def _run_single(problem: SearchProblem, cfg: SearchConfig, fitness,
+                mesh=None):
     """reference/kernel driver: chunked-scan generations + checkpoint/resume.
 
     Returns (state, n_evaluations, n_dispatches) for THIS call. Generations
     execute as `nsga2.make_chunk` programs of `checkpoint_every` length
     (falling back to the full run), so the host dispatches once per
-    checkpoint interval — bit-exact vs the historical per-generation loop."""
+    checkpoint interval — bit-exact vs the historical per-generation loop.
+
+    With a mesh the SAME schedule runs through `dist.make_sharded_chunk`
+    (population axis sharded, hierarchical domination, DESIGN.md §13) —
+    bit-identical arrays, so the checkpoint family stays "single" and a run
+    may freely resume onto a different mesh or none (elastic restore)."""
     from repro.runtime import checkpoint
 
     nsga_cfg = nsga2.NSGA2Config(pop_size=cfg.pop_size,
                                  n_generations=cfg.n_generations)
+    if mesh is not None:
+        from repro.core import dist
+        n_shards = mesh.shape["pop"]
+        if cfg.pop_size % n_shards:
+            raise ValueError(
+                f"pop_size={cfg.pop_size} not divisible by the mesh's "
+                f"pop axis ({n_shards})")
     key = jax.random.PRNGKey(cfg.seed)
     state = None
     start_gen = 0
@@ -208,21 +228,34 @@ def _run_single(problem: SearchProblem, cfg: SearchConfig, fitness):
         if step is not None:
             _validate_resume_meta(ckpt_dir, step, "single", cfg)
             state, start_gen = checkpoint.restore(
-                ckpt_dir, step, _restore_template(problem, cfg))
+                ckpt_dir, step, _restore_template(problem, cfg),
+                shardings=(dist.sharded_state_sharding(mesh)
+                           if mesh is not None else None))
 
     if state is None:
-        state = nsga2.init_state(key, fitness, problem.n_genes, nsga_cfg,
-                                 seed_genes=_seed_genes(problem, cfg))
+        if mesh is not None:
+            state = dist.init_sharded(key, fitness, problem.n_genes, mesh,
+                                      nsga_cfg,
+                                      seed_genes=_seed_genes(problem, cfg))
+        else:
+            state = nsga2.init_state(key, fitness, problem.n_genes, nsga_cfg,
+                                     seed_genes=_seed_genes(problem, cfg))
         n_evals += cfg.pop_size
         n_dispatches += 1
 
+    if mesh is not None:
+        make_chunk_fn = lambda n: dist.make_sharded_chunk(
+            fitness, mesh, nsga_cfg, n)
+    else:
+        make_chunk_fn = lambda n: jax.jit(nsga2.make_chunk(
+            fitness, nsga_cfg, n))
     # no out_dir -> nothing to save, so don't let checkpoint_every shrink
     # the chunks (the whole run stays one dispatch)
     saving = bool(ckpt_dir and cfg.checkpoint_every)
     state, cur_gen, n_chunks = _drive_chunks(
         state, start_gen, cfg.n_generations,
         cfg.checkpoint_every if saving else 0,
-        lambda n: jax.jit(nsga2.make_chunk(fitness, nsga_cfg, n)),
+        make_chunk_fn,
         (lambda gen, s: checkpoint.save(ckpt_dir, gen, s, meta=meta))
         if saving else None)
     n_evals += cfg.pop_size * (cur_gen - start_gen)
@@ -254,13 +287,15 @@ def _run_islands(problem: SearchProblem, cfg: SearchConfig):
     ceil(checkpoint_every / migrate_every) rounds, labeled in generations;
     `resume=True` restores the gathered island state through
     `runtime.checkpoint` and re-shards it onto the current mesh."""
-    from jax.sharding import Mesh
     from repro.core import dist
+    from repro.launch.mesh import make_search_mesh
     from repro.runtime import checkpoint
 
     fitness = _backends.make_reference_fitness(problem)
-    devices = np.array(jax.devices())
-    n_islands = len(devices)
+    # one mesh constructor for every driver (DESIGN.md §13); islands default
+    # to a ring over all host devices when --mesh is unset
+    mesh = make_search_mesh(cfg.mesh or "auto", axes=("data",))
+    n_islands = mesh.shape["data"]
     local_pop = max(8, cfg.pop_size // max(n_islands, 1))
     island_cfg = dist.IslandConfig(
         local_pop=local_pop,
@@ -272,7 +307,6 @@ def _run_islands(problem: SearchProblem, cfg: SearchConfig):
     n_rounds = max(1, -(-cfg.n_generations // cfg.migrate_every))
     ckpt_rounds = (max(1, -(-cfg.checkpoint_every // cfg.migrate_every))
                    if cfg.checkpoint_every else 0)
-    mesh = Mesh(devices, ("data",))
 
     state = None
     start_round = 0
@@ -345,12 +379,16 @@ def run_search(problem: SearchProblem, cfg: SearchConfig | None = None,
     if cfg.backend == "islands":
         state, n_evals, n_dispatches = _run_islands(problem, cfg)
     else:
+        from repro.launch.mesh import make_search_mesh
+
         kw = {}
         if cfg.backend == "kernel":
             kw = dict(block_p=cfg.block_p, block_b=cfg.block_b,
                       block_l=cfg.block_l, interpret=cfg.interpret)
         fitness = _backends.make_fitness(problem, cfg.backend, **kw)
-        state, n_evals, n_dispatches = _run_single(problem, cfg, fitness)
+        mesh = make_search_mesh(cfg.mesh, axes=("pop",))
+        state, n_evals, n_dispatches = _run_single(problem, cfg, fitness,
+                                                   mesh=mesh)
     wall_s = time.time() - t0
 
     objs, genes = nsga2.pareto_front(jax.device_get(state.objs),

@@ -319,6 +319,12 @@ class SweepConfig:
     vmapped: bool = True            # False = the serial bit-exact oracle
     granule: int = GRANULE
     max_buckets: int = DEFAULT_MAX_BUCKETS
+    # mesh spec for `launch.mesh.make_search_mesh(axes=("bucket", "pop"))`
+    # (DESIGN.md §13): "2x4" spreads each bucket's problem stack over 2
+    # bucket shards and every population over 4 shards; "4"/"auto" put all
+    # devices on the population axis. None = the single-device vmapped path.
+    # Requires vmapped=True (the serial loop is the mesh-free oracle).
+    mesh: str | None = None
     out_dir: str | None = None      # per-dataset artifacts under OUT/<name>/
     emit_rtl: bool = False
     verify_rtl: bool = False
@@ -374,6 +380,18 @@ def run_sweep(problems: dict[str, SearchProblem],
         raise ValueError("run_sweep needs at least one problem")
     if (cfg.emit_rtl or cfg.verify_rtl) and not cfg.out_dir:
         raise ValueError("emit_rtl/verify_rtl require out_dir")
+    mesh = None
+    if cfg.mesh:
+        from repro.launch.mesh import make_search_mesh
+
+        if not cfg.vmapped:
+            raise ValueError("mesh sharding requires the vmapped path "
+                             "(the serial loop is the mesh-free oracle)")
+        mesh = make_search_mesh(cfg.mesh, axes=("bucket", "pop"))
+        if mesh is not None and cfg.pop_size % mesh.shape["pop"]:
+            raise ValueError(
+                f"pop_size={cfg.pop_size} not divisible by the mesh's pop "
+                f"axis ({mesh.shape['pop']})")
 
     names_sorted = sorted(problems)
     keys = _problem_keys(names_sorted, cfg.seed)
@@ -393,18 +411,47 @@ def run_sweep(problems: dict[str, SearchProblem],
         seed_genes = quant.exact_genes(bucket.dims[0])
 
         if cfg.vmapped:
+            n_real = len(padded)
+            if mesh is not None:
+                # the stacked problem axis shards over the bucket mesh axis:
+                # pad the stack by repeating the last problem (extra lanes
+                # are pure compute waste, dropped below) so it divides
+                kb = mesh.shape["bucket"]
+                pad_k = (-n_real) % kb
+                padded = padded + [padded[-1]] * pad_k
+                if pad_k:
+                    bucket_keys = jnp.concatenate(
+                        [bucket_keys, jnp.tile(bucket_keys[-1:], (pad_k, 1))])
             stacked = stack_padded(padded)
             init = jax.jit(nsga2.make_batched_init(
                 population_objectives, n_genes, nsga_cfg,
                 seed_genes=seed_genes))
             states = init(bucket_keys, stacked)
-            chunk = jax.jit(nsga2.make_batched_chunk(
-                population_objectives, nsga_cfg, cfg.n_generations))
-            states = chunk(states, stacked)
+            if mesh is None:
+                chunk = jax.jit(nsga2.make_batched_chunk(
+                    population_objectives, nsga_cfg, cfg.n_generations))
+                states = chunk(states, stacked)
+            else:
+                # lay the stack over the (bucket, pop) mesh and advance the
+                # whole bucket with the sharded generation (DESIGN.md §13) —
+                # bit-identical lanes, so unpadding below is unchanged
+                from jax.sharding import NamedSharding, PartitionSpec as P
+                from repro.core import dist
+                from repro.sharding import search as _sspec
+
+                states = jax.tree.map(jax.device_put, states,
+                                      _sspec.batched_state_sharding(mesh))
+                ctx_shard = NamedSharding(mesh, P("bucket"))
+                stacked = jax.tree.map(
+                    lambda a: jax.device_put(a, ctx_shard), stacked)
+                chunk = dist.make_sharded_batched_chunk(
+                    population_objectives, mesh, nsga_cfg,
+                    cfg.n_generations)
+                states = chunk(states, stacked)
             states = jax.device_get(states)
             per_problem = [
                 jax.tree_util.tree_map(lambda a, i=i: a[i], states)
-                for i in range(len(padded))]
+                for i in range(n_real)]
             n_dispatches = 2
         else:
             # serial oracle: the SAME padded problems through the un-vmapped

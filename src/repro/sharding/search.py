@@ -1,0 +1,54 @@
+"""Partition specs for the mesh-sharded NSGA-II search state (DESIGN.md §13).
+
+One place owns how an `nsga2.NSGA2State` lays out over the search mesh, so
+the shard_map bodies in `core.dist`, the engine's checkpoint restore and the
+tests all agree:
+
+  - population arrays (genes/objs/rank/crowd) shard their population axis
+    over the ``pop`` mesh axis;
+  - the PRNG key and generation counter are REPLICATED — every shard draws
+    identical randomness, which is what makes the sharded step's selection /
+    variation bookkeeping bit-identical to the single-device oracle
+    (`core.dist._sharded_gen_body`);
+  - the batched (sweep) variants add a leading problem axis sharded over the
+    ``bucket`` mesh axis; per-problem keys and generation counters follow
+    the problem axis.
+"""
+from __future__ import annotations
+
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import nsga2
+
+
+def search_state_specs(axis: str = "pop") -> nsga2.NSGA2State:
+    """PartitionSpec pytree for one sharded search state (shard_map specs)."""
+    return nsga2.NSGA2State(genes=P(axis), objs=P(axis), rank=P(axis),
+                            crowd=P(axis), key=P(), generation=P())
+
+
+def batched_state_specs(bucket_axis: str = "bucket",
+                        axis: str = "pop") -> nsga2.NSGA2State:
+    """PartitionSpec pytree for a (problems, population) stacked state."""
+    return nsga2.NSGA2State(
+        genes=P(bucket_axis, axis), objs=P(bucket_axis, axis),
+        rank=P(bucket_axis, axis), crowd=P(bucket_axis, axis),
+        key=P(bucket_axis), generation=P(bucket_axis),
+    )
+
+
+def search_state_sharding(mesh: Mesh, axis: str = "pop") -> nsga2.NSGA2State:
+    """NamedSharding pytree for device_put / elastic checkpoint restore."""
+    spec = search_state_specs(axis)
+    return nsga2.NSGA2State(
+        **{f: NamedSharding(mesh, getattr(spec, f))
+           for f in ("genes", "objs", "rank", "crowd", "key", "generation")})
+
+
+def batched_state_sharding(mesh: Mesh, bucket_axis: str = "bucket",
+                           axis: str = "pop") -> nsga2.NSGA2State:
+    """NamedSharding pytree for the sweep's stacked sharded states."""
+    spec = batched_state_specs(bucket_axis, axis)
+    return nsga2.NSGA2State(
+        **{f: NamedSharding(mesh, getattr(spec, f))
+           for f in ("genes", "objs", "rank", "crowd", "key", "generation")})

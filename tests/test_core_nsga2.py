@@ -197,8 +197,38 @@ def test_domination_routing_stays_jnp_off_tpu(monkeypatch):
     calls = []
     real = nsga2.domination_matrix
     monkeypatch.setattr(nsga2, "domination_matrix",
-                        lambda objs: calls.append(1) or real(objs))
+                        lambda objs, against=None:
+                        calls.append(1) or real(objs, against))
     objs = jnp.asarray(np.random.default_rng(0).uniform(0, 1, (48, 2)),
                        dtype=jnp.float32)
     nsga2.non_dominated_sort(objs)
     assert calls  # the pure-jnp path ran
+
+
+def test_domination_routing_decides_on_local_rows(monkeypatch):
+    """Kernel routing keys on objs.shape[0] — the LOCAL (post-shard) row
+    count — not the global column count: a small per-shard slab of a large
+    gathered pool must stay on the jnp path, and a slab at the threshold
+    must engage the kernel (DESIGN.md §13)."""
+    from repro.kernels import ops as kops
+
+    monkeypatch.setattr(nsga2, "DOMINATION_KERNEL_MIN_POP", 64)
+    monkeypatch.setattr(nsga2, "_kernel_domination_available", lambda: True)
+    calls = []
+    real = kops.domination_block_bool
+    monkeypatch.setattr(kops, "domination_block_bool",
+                        lambda a, b, **kw:
+                        calls.append((a.shape[0], b.shape[0]))
+                        or real(a, b, interpret=True))
+    rng = np.random.default_rng(4)
+    pool = jnp.asarray(rng.uniform(0, 1, (128, 2)), dtype=jnp.float32)
+    rows_small = pool[:32]
+    rows_big = pool[:64]
+    want_small = np.asarray(nsga2.domination_matrix(rows_small, pool))
+    want_big = np.asarray(nsga2.domination_matrix(rows_big, pool))
+    got_small = np.asarray(nsga2._dispatch_domination(rows_small, pool))
+    assert calls == []  # 32 rows < min pop: jnp, even though pool is 128
+    got_big = np.asarray(nsga2._dispatch_domination(rows_big, pool))
+    assert calls == [(64, 128)]  # 64 rows: the kernel engages
+    np.testing.assert_array_equal(got_small, want_small)
+    np.testing.assert_array_equal(got_big, want_big)

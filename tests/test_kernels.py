@@ -103,6 +103,28 @@ def test_domination_kernel_plugs_into_nsga2():
     np.testing.assert_array_equal(np.asarray(rank_kernel), np.asarray(rank_ref))
 
 
+@pytest.mark.parametrize("pi,pj,m", [
+    (8, 16, 2), (130, 64, 3), (5, 300, 2), (64, 64, 4),
+])
+def test_domination_block_rectangular_matches_oracle(pi, pj, m):
+    """The sharded-sort entry point (DESIGN.md §13): a (Pi, Pj) row block of
+    the domination matrix, rows and columns from DIFFERENT populations, must
+    equal the rectangular jnp oracle exactly (incl. internal +inf padding)."""
+    rng = np.random.default_rng(pi * 1000 + pj)
+    a = jnp.asarray(rng.integers(0, 5, (pi, m)).astype(np.float32))
+    b = jnp.asarray(rng.integers(0, 5, (pj, m)).astype(np.float32))
+    got = ops.domination_block_bool(a, b, interpret=True)
+    want = ref.domination_matrix(a, b)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_domination_block_rejects_mismatched_objectives():
+    a = jnp.zeros((8, 2), dtype=jnp.float32)
+    b = jnp.zeros((8, 3), dtype=jnp.float32)
+    with pytest.raises(ValueError):
+        ops.domination_block(a, b, interpret=True)
+
+
 # ---------------------------------------------------------------------------
 # qmatmul
 # ---------------------------------------------------------------------------

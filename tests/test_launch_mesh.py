@@ -1,0 +1,46 @@
+"""`make_search_mesh` spec parsing: the one constructor behind every
+`--mesh` knob (DESIGN.md §13). Runs on however many devices the host has —
+single-device environments exercise the error paths."""
+import jax
+import pytest
+
+from repro.launch.mesh import make_search_mesh
+
+
+def test_none_specs_mean_single_device_path():
+    assert make_search_mesh(None) is None
+    assert make_search_mesh("") is None
+    assert make_search_mesh("none") is None
+
+
+def test_auto_uses_all_devices_on_last_axis():
+    n = len(jax.devices())
+    mesh = make_search_mesh("auto", axes=("pop",))
+    assert mesh.shape == {"pop": n}
+    mesh2 = make_search_mesh("auto", axes=("bucket", "pop"))
+    assert mesh2.shape == {"bucket": 1, "pop": n}
+
+
+def test_single_extent_lands_on_last_axis():
+    mesh = make_search_mesh("1", axes=("bucket", "pop"))
+    assert mesh.shape == {"bucket": 1, "pop": 1}
+
+
+def test_explicit_extents_match_axes():
+    mesh = make_search_mesh("1x1", axes=("bucket", "pop"))
+    assert tuple(mesh.axis_names) == ("bucket", "pop")
+
+
+def test_rejects_garbage_and_bad_extents():
+    with pytest.raises(ValueError, match="bad mesh spec"):
+        make_search_mesh("junk")
+    with pytest.raises(ValueError, match=">= 1"):
+        make_search_mesh("0")
+    with pytest.raises(ValueError, match="axes"):
+        make_search_mesh("1x1x1", axes=("bucket", "pop"))
+
+
+def test_rejects_more_devices_than_host_has():
+    n = len(jax.devices())
+    with pytest.raises(ValueError, match="devices"):
+        make_search_mesh(str(n + 1))

@@ -24,11 +24,17 @@ or hand-mangled artifact fails loudly:
      generation speedup inside the FITNESS_MIN_SPEEDUP no-regression band
      — small rows are dispatch/noise-bound on CPU, same reasoning as the
      crossover band.
+  5. invariant: `sharded_search` rows (DESIGN.md §13) must show the
+     hierarchical domination sort splitting the monolithic O(P²) pool
+     pair-comparisons by exactly the shard count, a single dispatch per
+     sharded run, and at least one >= SHARDED_MIN_SHARDS-way mesh row
+     (deterministic — checked even in --smoke).
 
 `--smoke` validates a freshly-measured artifact in CI: schema + the
 deterministic invariants only (timing floors are meaningless on a shared
-runner), and sections absent from the artifact are allowed (the smoke bench
-emits only `fitness_pipeline`).
+runner), and sections absent from the artifact are allowed (the smoke
+benches emit only their own section — `fitness_pipeline` or
+`sharded_search`).
 
 Run from the repo root (CI does):  python tools/check_bench.py
 """
@@ -110,7 +116,28 @@ SCHEMA = {
         "hbm_bytes_per_eval_fused": int,
         "hbm_write_reduction": float,
     },
+    "sharded_search": {
+        "dataset": str,
+        "pop": int,
+        "pop_per_shard": int,
+        "n_shards": int,
+        "n_generations": int,
+        "dom_pairs_per_gen_monolithic": int,
+        "dom_pairs_per_gen_per_shard": int,
+        "dom_work_reduction_per_shard": float,
+        "dispatches_per_run": int,
+        "dispatches_per_generation": float,
+        "us_per_generation": float,
+    },
 }
+
+# DESIGN.md §13: the hierarchical sort hands each shard a (2P/S, 2P) row
+# block of the pool domination matrix — an exact S-fold split of the
+# monolithic (2P)² pair-comparisons — and the sharded chunk stays one
+# lax.scan dispatch per run. Both are analytic, so enforced in --smoke too.
+# The section must also demonstrate an actual multi-shard mesh (>= this
+# many shards) or the weak-scaling ladder shows nothing.
+SHARDED_MIN_SHARDS = 4
 
 
 def check_rows(section: str, rows, errors: list[str]) -> None:
@@ -222,6 +249,41 @@ def check_deterministic(bench: dict, errors: list[str]) -> None:
                 f"[{row.get('n_trees')}]): hbm_write_reduction={red:.1f} < "
                 f"{HBM_MIN_REDUCTION} — the §12 fused kernel no longer cuts "
                 f"the O(P·B·C) vote-tensor write traffic")
+    max_shards = 0
+    for i, row in enumerate(bench.get("sharded_search", [])):
+        if not isinstance(row, dict):
+            continue
+        s = row.get("n_shards")
+        mono = row.get("dom_pairs_per_gen_monolithic")
+        per = row.get("dom_pairs_per_gen_per_shard")
+        red = row.get("dom_work_reduction_per_shard")
+        disp = row.get("dispatches_per_run")
+        if isinstance(s, int):
+            max_shards = max(max_shards, s)
+        if not all(isinstance(v, (int, float)) and not isinstance(v, bool)
+                   for v in (s, mono, per, red, disp)):
+            continue
+        if per <= 0 or abs(red - mono / per) > 1e-6 * max(red, 1.0):
+            errors.append(
+                f"sharded_search[{i}]: dom_work_reduction_per_shard ({red}) "
+                f"does not match monolithic/per_shard ({mono}/{per})")
+        elif red < s:
+            errors.append(
+                f"sharded_search[{i}] (n_shards={s}): "
+                f"dom_work_reduction_per_shard={red:.2f} < {s} — the §13 "
+                f"hierarchical sort no longer splits the O(P²) pool "
+                f"domination matrix across shards")
+        if disp != 1:
+            errors.append(
+                f"sharded_search[{i}] (n_shards={s}): dispatches_per_run="
+                f"{disp} != 1 — the sharded chunk is no longer a single "
+                f"device-resident lax.scan (DESIGN.md §9/§13)")
+    if bench.get("sharded_search") and max_shards < SHARDED_MIN_SHARDS:
+        errors.append(
+            f"sharded_search: max n_shards={max_shards} < "
+            f"{SHARDED_MIN_SHARDS} — the weak-scaling ladder must include a "
+            f">= {SHARDED_MIN_SHARDS}-way mesh row (simulate devices with "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count=8)")
 
 
 def main(argv=None) -> int:
@@ -266,7 +328,8 @@ def main(argv=None) -> int:
         return 1
     n_rows = sum(len(bench.get(s) or []) for s in SCHEMA)
     mode = "smoke: deterministic floors" if args.smoke else \
-        "fused/hoisted speedups, §9 dispatch counts and §12 HBM floors"
+        "fused/hoisted speedups, §9 dispatch counts, §12 HBM and " \
+        "§13 shard-split floors"
     print(f"check_bench: OK ({n_rows} rows; {mode} within bounds)")
     return 0
 

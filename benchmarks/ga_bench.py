@@ -473,14 +473,17 @@ def run_sharded(dataset="seeds", pop_per_shard=32, gens=8,
 
 
 def write_artifact(tree_rows=None, forest_rows=None, dispatch_rows=None,
-                   fitness_rows=None, sharded_rows=None,
+                   fitness_rows=None, sharded_rows=None, serving_rows=None,
                    path=ARTIFACT) -> str:
     """Emit BENCH_search.json: the search-engine throughput artifact.
 
     Sections passed as None are carried over from an existing artifact at
-    ``path`` (so partial regenerations — `--fitness-only`, `--sharded-only`
-    — don't blank the committed sections they didn't re-measure); absent
-    files start every unmeasured section empty."""
+    ``path`` (so partial regenerations — `--fitness-only`, `--sharded-only`,
+    `benchmarks/serve_bench` — don't blank the committed sections they
+    didn't re-measure); absent files start every unmeasured section empty.
+    Every section the artifact can hold MUST appear in the payload dict
+    below: the carry-over loop iterates its keys, so a section missing here
+    would be silently dropped on regeneration."""
     payload = {
         "backend": jax.default_backend(),
         "single_tree": [],
@@ -488,6 +491,7 @@ def write_artifact(tree_rows=None, forest_rows=None, dispatch_rows=None,
         "dispatch_per_generation": [],
         "fitness_pipeline": [],
         "sharded_search": [],
+        "serving": [],
     }
     try:
         with open(path) as f:
@@ -500,7 +504,8 @@ def write_artifact(tree_rows=None, forest_rows=None, dispatch_rows=None,
     for k, rows in (("single_tree", tree_rows), ("forest", forest_rows),
                     ("dispatch_per_generation", dispatch_rows),
                     ("fitness_pipeline", fitness_rows),
-                    ("sharded_search", sharded_rows)):
+                    ("sharded_search", sharded_rows),
+                    ("serving", serving_rows)):
         if rows is not None:
             payload[k] = rows
     os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)

@@ -1,0 +1,192 @@
+"""Serving-runtime microbenchmark: the featurize → batch → classify split.
+
+Measures `runtime.classify.ClassifyServer` (DESIGN.md §14) the way an LM
+serving bench splits prefill/insert/generate — one stage at a time, so a
+regression points at the stage that caused it:
+
+  - **featurize**: float features -> master 8-bit codes (host quantize);
+  - **batch**: request codes -> padded power-of-two bucket (host pad);
+  - **classify**: one resident ping-pong step through the fused inference
+    kernel, including the cropped readback of the real rows.
+
+Each `serving` row in BENCH_search.json records the per-stage and total
+per-request latencies, throughput, the per-sample speedup of batched
+serving over batch=1 dispatches, and two deterministic zero-cost
+invariants floor-checked by `tools/check_bench.py` (CI `--smoke` included):
+
+  - `steady_state_new_arrays == 0`: after the ping-pong slots warm up,
+    serving K more steps must not grow `jax.live_arrays()` — the donated
+    two-slot state recycles its buffers instead of reallocating;
+  - `compiles_after_warmup == 0`: every request size inside a bucket reuses
+    the bucket's compiled step — steady-state serving never re-traces.
+
+Run:  PYTHONPATH=src python -m benchmarks.serve_bench [--quick] [--out P]
+(with --out the artifact lands there instead of the committed
+BENCH_search.json; unmeasured sections carry over either way).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.ga_bench import write_artifact
+from repro import search
+from repro.datasets import load_dataset
+from repro.core.forest import train_forest
+from repro.core.train import train_tree
+from repro.core.tree import to_parallel
+from repro.runtime.classify import ClassifyServer
+
+# (dataset, n_trees, request sizes). batch=1 anchors the batched-speedup
+# ratio; >= 32 rows are the ones check_bench floors (batch=1 dispatch
+# overhead is exactly what batching amortizes away).
+SERVE_SPECS = (
+    ("seeds", 1, (1, 16, 64, 256)),
+    ("pendigits", 1, (1, 64, 256)),
+    ("seeds", 4, (1, 64)),
+)
+QUICK_SPECS = (("seeds", 1, (1, 64)),)
+
+WARMUP_STEPS = 4          # >= 2 fills both ping-pong slots per bucket
+STEADY_STEPS = 16
+
+
+def _time_stage(fn, repeat: int) -> float:
+    """Best-of per-call seconds over `repeat`-sized batches (3 trials)."""
+    fn()  # warm (compile/allocate)
+    best = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        for _ in range(repeat):
+            fn()
+        best = min(best, (time.perf_counter() - t0) / repeat)
+    return best
+
+
+def _build_server(dataset: str, n_trees: int) -> tuple:
+    ds = load_dataset(dataset)
+    if n_trees <= 1:
+        pt = to_parallel(train_tree(ds.x_train, ds.y_train, ds.n_classes))
+        problem = search.build_tree_problem(pt, ds.x_test, ds.y_test)
+    else:
+        forest = train_forest(ds.x_train, ds.y_train, ds.n_classes,
+                              n_trees=n_trees)
+        problem = search.build_forest_problem(forest, ds.x_test, ds.y_test)
+    # the exact (8-bit, zero-margin) design: the serving payload every
+    # searched point is a shrunken version of
+    import jax.numpy as jnp
+    bits, t_int = search.decode_chromosome(
+        problem, jnp.asarray(problem.exact_genes()))
+    server = ClassifyServer(search.problem_ptrees(problem),
+                            np.asarray(bits), np.asarray(t_int),
+                            problem.n_classes, problem.n_features)
+    return server, problem, ds
+
+
+def _request_pool(ds, batch: int) -> list[np.ndarray]:
+    """Two distinct request payloads (float features) of `batch` rows —
+    alternating them keeps the steady-state loop from serving one constant
+    buffer the runtime could cache."""
+    x = np.asarray(ds.x_test, np.float32)
+    reps = -(-2 * batch // x.shape[0])
+    pool = np.tile(x, (max(1, reps), 1))[: 2 * batch]
+    if pool.shape[0] < 2 * batch:  # tiny split: repeat rows
+        pool = np.tile(pool, (-(-2 * batch // pool.shape[0]), 1))[: 2 * batch]
+    return [pool[:batch], pool[batch: 2 * batch]]
+
+
+def run_serving(specs=SERVE_SPECS) -> list[dict]:
+    rows = []
+    for dataset, n_trees, batches in specs:
+        server, problem, ds = _build_server(dataset, n_trees)
+        per_sample_b1 = None
+        for batch in batches:
+            reqs = _request_pool(ds, batch)
+            codes = [server.featurize(r) for r in reqs]
+            padded = [server.batch(c)[0][0] for c in codes]
+            bucket = padded[0].shape[0]
+            n_real = batch
+
+            # warm both ping-pong slots + the bucket's compiled step
+            for i in range(WARMUP_STEPS):
+                np.asarray(server.step(padded[i % 2]))[:n_real]
+
+            # deterministic steady-state invariants
+            compiles0 = server.compile_count()
+            live0 = len(jax.live_arrays())
+            for i in range(STEADY_STEPS):
+                np.asarray(server.step(padded[i % 2]))[:n_real]
+            new_arrays = max(0, len(jax.live_arrays()) - live0)
+            new_compiles = server.compile_count() - compiles0
+
+            # per-stage timings (amortize to >= ~30ms batches of calls)
+            i_box = [0]
+
+            def classify_once():
+                i_box[0] ^= 1
+                return np.asarray(server.step(padded[i_box[0]]))[:n_real]
+
+            s_feat = _time_stage(lambda: server.featurize(reqs[0]),
+                                 repeat=max(20, 2000 // max(batch, 1)))
+            s_batch = _time_stage(lambda: server.batch(codes[0]),
+                                  repeat=max(20, 2000 // max(batch, 1)))
+            s_cls = _time_stage(classify_once, repeat=50)
+            us_total = (s_feat + s_batch + s_cls) * 1e6
+            per_sample = us_total / batch
+            if batch == 1:
+                per_sample_b1 = per_sample
+            speedup = (per_sample_b1 / per_sample
+                       if per_sample_b1 is not None else 1.0)
+            rows.append({
+                "dataset": dataset,
+                "n_trees": n_trees,
+                "n_comparators": problem.n_comparators,
+                "n_classes": problem.n_classes,
+                "batch": batch,
+                "bucket": bucket,
+                "us_featurize_per_req": round(s_feat * 1e6, 2),
+                "us_batch_per_req": round(s_batch * 1e6, 2),
+                "us_classify_per_req": round(s_cls * 1e6, 2),
+                "us_total_per_req": round(us_total, 2),
+                "requests_per_s": round(1e6 / max(us_total, 1e-9), 1),
+                "samples_per_s": round(batch * 1e6 / max(us_total, 1e-9), 1),
+                "batched_speedup_vs_b1": round(speedup, 3),
+                "steady_state_new_arrays": int(new_arrays),
+                "compiles_after_warmup": int(new_compiles),
+                "n_steps": int(server.stats.n_steps),
+            })
+    return rows
+
+
+def _print_rows(rows):
+    for r in rows:
+        print(f"serve.{r['dataset']}[{r['n_trees']}] b={r['batch']}"
+              f"->bucket {r['bucket']}: "
+              f"featurize={r['us_featurize_per_req']}us "
+              f"batch={r['us_batch_per_req']}us "
+              f"classify={r['us_classify_per_req']}us "
+              f"({r['samples_per_s']:,.0f} samples/s, "
+              f"{r['batched_speedup_vs_b1']}x vs b=1/sample; "
+              f"new_arrays={r['steady_state_new_arrays']} "
+              f"recompiles={r['compiles_after_warmup']})")
+
+
+def main(quick=False, out=None):
+    rows = run_serving(QUICK_SPECS if quick else SERVE_SPECS)
+    path = write_artifact(serving_rows=rows,
+                          **({"path": out} if out else {}))
+    _print_rows(rows)
+    print(f"artifact: {path}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="one dataset, two request sizes (CI smoke)")
+    ap.add_argument("--out", default=None,
+                    help="artifact path (default: committed BENCH_search.json)")
+    args = ap.parse_args()
+    main(quick=args.quick, out=args.out)

@@ -12,7 +12,7 @@ import jax.numpy as jnp
 
 from repro.configs import get_config, reduced_config
 from repro.models import transformer
-from repro.runtime import serve
+from repro.runtime import lm_serve as serve
 
 
 def main():

@@ -163,6 +163,41 @@ def _fit_block_l(l_pad: int, block_l: int) -> int:
 
 
 # ---------------------------------------------------------------------------
+# serving (DESIGN.md §14)
+# ---------------------------------------------------------------------------
+
+def prepare_design(bits, t_int):
+    """Fixed-design kernel operands from a decoded pareto point.
+
+    ``bits``/``t_int`` are one design's per-comparator precisions and
+    substituted integer thresholds (e.g. a `pareto.json` point's `bits` /
+    `t_int` arrays) — the already-decoded form, so serving never re-rounds
+    genes. Returns (scale, thr), both (1, N) f32: the P=1 row the
+    population kernels consume.
+    """
+    bits = jnp.asarray(bits, jnp.int32)
+    scale = jnp.exp2(-(quant.MASTER_BITS - bits).astype(jnp.float32))[None, :]
+    thr = jnp.asarray(t_int, jnp.float32)[None, :]
+    return scale, thr
+
+
+def classify(x8, pt_operands, design, *, block_b=256, block_l=None,
+             interpret=None):
+    """(B,) predicted classes for ONE fixed tree/forest design.
+
+    The batch-1..bucket serving entry (DESIGN.md §14): the P=1 row of
+    `tree_infer_predict` over the same prepared operands, so a served
+    prediction runs the exact tensor program the search scored — and the
+    netlist simulator stays its bit-exact oracle. ``design`` comes from
+    `prepare_design`; ``x8`` is (B, F) int master codes with B at any
+    bucket size (the kernel pads the batch axis to ``block_b`` internally).
+    """
+    scale, thr = design
+    return tree_infer_predict(x8, pt_operands, scale, thr, block_b=block_b,
+                              block_l=block_l, interpret=interpret)[0]
+
+
+# ---------------------------------------------------------------------------
 # fitness (fused fitness pipeline, DESIGN.md §12)
 # ---------------------------------------------------------------------------
 

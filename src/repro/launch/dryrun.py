@@ -39,7 +39,7 @@ from repro.launch.mesh import make_production_mesh, rules_for
 from repro.models import lm, transformer
 from repro.optim import get_optimizer
 from repro.runtime import train as train_rt
-from repro.runtime import serve as serve_rt
+from repro.runtime import lm_serve as serve_rt
 from repro.sharding import params as sp
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",

@@ -1,3 +1,13 @@
-from repro.runtime import checkpoint, serve, train
+from repro.runtime import checkpoint, classify, lm_serve, train
 
-__all__ = ["checkpoint", "serve", "train"]
+__all__ = ["checkpoint", "classify", "lm_serve", "serve", "train"]
+
+
+def __getattr__(name):
+    # `serve` is a deprecated alias of `lm_serve` (see runtime/serve.py);
+    # importing it lazily keeps the DeprecationWarning out of code that
+    # never touches the old name.
+    if name == "serve":
+        from repro.runtime import serve
+        return serve
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,325 @@
+"""High-throughput classifier serving runtime (DESIGN.md §14).
+
+The end product of the search is one Pareto design — a printed
+decision-tree classifier meant to answer feature-vector queries
+continuously. `ClassifyServer` loads that design (from a `pareto.json`
+point via `search.load_pareto_artifact`, or directly from decoded
+`bits`/`t_int` arrays) and serves it at high request rates:
+
+  - **Request micro-batching on power-of-two buckets.** A request of n
+    feature vectors pads up to `sweep.round_up_pow2(n)` — the SAME rounding
+    rule as the sweep's shape buckets — so the server compiles one step
+    program per bucket, not per request size; padding rows are inert
+    (row-independent dataflow: a padded row can never change a real row's
+    prediction) and are cropped before results return.
+  - **Donated ping-pong device buffers.** Each bucket keeps two resident
+    `ServeState` slots used alternately; the step donates the incoming
+    slot, so XLA reuses its buffers for the outputs and steady-state
+    serving never grows the live-array set. Alternation means the host can
+    fill one slot's transfer while the device still computes on the other.
+    Donation auto-enables on tpu/gpu only (CPU jax has no donation and
+    would warn) — the two-slot structure and the zero-realloc invariant
+    hold on every backend.
+  - **A featurize → batch → classify stage split** (the classifier analogue
+    of an LM server's prefill/insert/generate): `featurize` quantizes float
+    features to the master 8-bit grid, `batch` pads request codes to bucket
+    shape, and the classify step runs the fused inference kernel.
+    `benchmarks/serve_bench.py` times each stage separately and records
+    `serving` rows in BENCH_search.json.
+
+Every fast path is pinned bit-exact against the gate-level netlist
+simulator (`core/netlist.py`) — the oracle triangle (served == tensor
+`predict_votes` == netlist sim) is asserted per pareto point in
+`tests/test_serve_classifier.py` and by the CLI's `--verify-netlist`.
+Integer inputs are sanitized with a mask (`codes & 0xFF`), NOT a clip:
+the netlist reads exactly input bits 0..7, so out-of-grid integers wrap
+mod 256 in hardware and the server must (and does) agree bit-for-bit.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import quant
+from repro.core.tree import concatenate_ptrees
+from repro.datasets.synthetic import quantize_u8
+from repro.kernels import ops as kops
+from repro.search.sweep import GRANULE, round_up_pow2
+
+BACKENDS = ("kernel", "reference")
+
+
+class ServeState(NamedTuple):
+    """One resident serving slot: input buffer, predictions, step count."""
+
+    x: jnp.ndarray      # (bucket, F) int32 master codes
+    preds: jnp.ndarray  # (bucket,) int32 predicted classes
+    count: jnp.ndarray  # () int32 steps this slot has served
+
+
+@dataclasses.dataclass
+class ServeStats:
+    """Serving counters (mutated in place by `ClassifyServer`)."""
+
+    n_requests: int = 0
+    n_samples: int = 0
+    n_steps: int = 0
+    steps_per_bucket: dict = dataclasses.field(default_factory=dict)
+
+
+def _auto_donate() -> bool:
+    # buffer donation is a tpu/gpu feature; CPU jax warns and ignores it
+    return jax.default_backend() in ("tpu", "gpu")
+
+
+class ClassifyServer:
+    """Serve one fixed approximate tree/forest design under load.
+
+    Parameters
+    ----------
+    ptrees : list[ParallelTree]
+        The trained ensemble layout (e.g. `ParetoArtifact.ptrees()` or
+        `search.problem_ptrees(problem)`).
+    bits, t_int : (N,) int arrays
+        The decoded design — per-comparator precisions and substituted
+        integer thresholds — concatenated across trees in `ptrees` order.
+    n_classes : int
+    n_features : int | None
+        Feature-vector width; defaults to the widest feature index any
+        comparator reads + 1 (requests may be wider — unused columns are
+        ignored, exactly as in the circuit).
+    backend : "kernel" (fused Pallas inference, the serving fast path) or
+        "reference" (the pure-jnp `predict_votes` dataflow). Both are
+        pinned bit-exact to the netlist oracle.
+    max_batch : largest bucket; requests beyond it split into chunks.
+    granule : smallest bucket (shared with the sweep's `GRANULE`).
+    interpret : Pallas interpreter override (None = auto: interpret off-TPU).
+    donate : donate the ping-pong slot to the step (None = auto: tpu/gpu).
+    """
+
+    def __init__(self, ptrees, bits, t_int, n_classes: int,
+                 n_features: int | None = None, *, backend: str = "kernel",
+                 max_batch: int = 1024, granule: int = GRANULE,
+                 interpret: bool | None = None, donate: bool | None = None):
+        if backend not in BACKENDS:
+            raise ValueError(
+                f"unknown serving backend {backend!r}; options: {BACKENDS}")
+        if max_batch < granule:
+            raise ValueError(f"max_batch={max_batch} < granule={granule}")
+        arrays = concatenate_ptrees(ptrees)
+        self.feature = np.asarray(arrays["feature"], np.int32)
+        n = self.feature.shape[0]
+        bits = np.asarray(bits, np.int32)
+        t_int = np.asarray(t_int, np.int32)
+        if bits.shape != (n,) or t_int.shape != (n,):
+            raise ValueError(
+                f"design arrays bits{bits.shape}/t_int{t_int.shape} do not "
+                f"match the ensemble's {n} comparators")
+        self.bits = bits
+        self.t_int = t_int
+        self.n_classes = int(n_classes)
+        self.n_features = int(n_features) if n_features is not None else (
+            int(self.feature.max()) + 1 if n else 1)
+        if n and self.n_features <= int(self.feature.max()):
+            raise ValueError(
+                f"n_features={self.n_features} but a comparator reads "
+                f"feature {int(self.feature.max())}")
+        self.backend = backend
+        self.max_batch = int(max_batch)
+        self.granule = int(granule)
+        self.interpret = interpret
+        self.donate = _auto_donate() if donate is None else bool(donate)
+        self.stats = ServeStats()
+
+        # design + operands are built ONCE; every bucket's step closes over
+        # the same device arrays (the chromosome-invariant prep of §12,
+        # specialised to a single fixed design)
+        self._design = kops.prepare_design(bits, t_int)
+        self._operands = kops.prepare_operands(
+            arrays["feature"], arrays["path"], arrays["path_len"],
+            arrays["n_neg"], arrays["leaf_class"], self.n_classes,
+            self.n_features)
+        # reference-backend operands (the predict_votes dataflow)
+        self._ref = dict(
+            feature=jnp.asarray(self.feature),
+            bits=jnp.asarray(bits),
+            t_int=jnp.asarray(t_int),
+            path_t=jnp.asarray(np.asarray(arrays["path"]).T
+                               .astype(np.float32)),
+            target=jnp.asarray((np.asarray(arrays["path_len"])
+                                - np.asarray(arrays["n_neg"]))
+                               .astype(np.float32)),
+            cls1h=jax.nn.one_hot(jnp.asarray(arrays["leaf_class"]),
+                                 self.n_classes),
+        )
+
+        self._steps: dict[int, object] = {}      # bucket -> jitted step
+        self._slots: dict[int, list] = {}        # bucket -> [state, state]
+        self._slot_idx: dict[int, int] = {}
+
+    # -- construction ------------------------------------------------------
+
+    @classmethod
+    def from_artifact(cls, artifact, point: int | str = "best",
+                      max_loss: float = 0.01, **opts) -> "ClassifyServer":
+        """Serve a `pareto.json` point.
+
+        ``artifact`` is a `search.ParetoArtifact` or a path to pareto.json;
+        ``point`` selects the pareto index, or "best" for the smallest-area
+        point within ``max_loss``. The design re-materializes from the
+        artifact alone (layout + decoded bits/t_int — DESIGN.md §14).
+        """
+        from repro.search import artifact as _artifact
+
+        if isinstance(artifact, str):
+            artifact = _artifact.load_pareto_artifact(artifact)
+        if point == "best":
+            idx = artifact.best_under_loss(max_loss)
+            if idx is None:
+                raise ValueError(
+                    f"no pareto point within max_loss={max_loss}; "
+                    f"losses: {[p['acc_loss'] for p in artifact.points]}")
+        else:
+            idx = int(point)
+            if not 0 <= idx < len(artifact.points):
+                raise ValueError(
+                    f"pareto point {idx} out of range "
+                    f"(artifact has {len(artifact.points)} points)")
+        bits, t_int = artifact.point_design(idx)
+        server = cls(artifact.ptrees(), bits, t_int, artifact.n_classes,
+                     **opts)
+        server.artifact = artifact
+        server.point_index = idx
+        return server
+
+    # -- the three serving stages -----------------------------------------
+
+    def featurize(self, x) -> np.ndarray:
+        """Float features in [0, 1] (n, F) -> master 8-bit codes (n, F)."""
+        return quantize_u8(np.asarray(x))
+
+    def sanitize(self, codes) -> np.ndarray:
+        """Integer codes -> the 8 input bits the circuit actually reads.
+
+        A MASK, not a clip: `core.netlist.simulate` reads bits 0..7 of each
+        input, so any integer wraps mod 256 in hardware — serving must
+        reproduce that bit-for-bit for out-of-grid values too.
+        """
+        return (np.asarray(codes).astype(np.int64) & 0xFF).astype(np.int32)
+
+    def bucket_for(self, n: int) -> int:
+        """Power-of-two batch bucket serving a request of n rows."""
+        return min(self.max_batch, round_up_pow2(n, self.granule))
+
+    def batch(self, codes) -> list[tuple[np.ndarray, int]]:
+        """Pad request codes up to bucket shape(s).
+
+        Returns [(padded (bucket, F) int32, n_real)], one entry per
+        `max_batch` chunk (a single entry for requests that fit one
+        bucket). Padding rows are zero — inert by row independence.
+        """
+        codes = np.asarray(codes, np.int32)
+        if codes.ndim != 2:
+            raise ValueError(f"expected (n, F) codes, got shape {codes.shape}")
+        if codes.shape[1] < self.n_features:
+            raise ValueError(
+                f"request has {codes.shape[1]} features; the design reads "
+                f"{self.n_features}")
+        out = []
+        for lo in range(0, codes.shape[0], self.max_batch) or [0]:
+            chunk = codes[lo:lo + self.max_batch]
+            bucket = self.bucket_for(chunk.shape[0])
+            padded = np.zeros((bucket, codes.shape[1]), np.int32)
+            padded[:chunk.shape[0]] = chunk
+            out.append((padded, chunk.shape[0]))
+        return out
+
+    def classify_codes(self, codes) -> np.ndarray:
+        """(n, F) integer master codes -> (n,) predicted classes."""
+        codes = self.sanitize(codes)
+        self.stats.n_requests += 1
+        self.stats.n_samples += int(codes.shape[0])
+        if codes.shape[0] == 0:
+            return np.zeros((0,), np.int32)
+        preds = [np.asarray(self.step(padded))[:n]
+                 for padded, n in self.batch(codes)]
+        return np.concatenate(preds).astype(np.int32)
+
+    def classify(self, x) -> np.ndarray:
+        """Serve one request: (n, F) features -> (n,) predicted classes.
+
+        Float inputs are featurized to the master grid; integer inputs are
+        taken as codes (masked to the circuit's 8 input bits).
+        """
+        x = np.asarray(x)
+        codes = x if np.issubdtype(x.dtype, np.integer) else self.featurize(x)
+        return self.classify_codes(codes)
+
+    # -- bucketed ping-pong step ------------------------------------------
+
+    def step(self, padded: np.ndarray):
+        """Run one bucket-shaped batch through the resident step.
+
+        `padded` is (bucket, F) int32 from `batch`. Returns the device
+        predictions array (bucket,) — callers crop to the real row count.
+        """
+        bucket = int(padded.shape[0])
+        step_fn = self._steps.get(bucket)
+        if step_fn is None:
+            step_fn = self._steps[bucket] = self._build_step(bucket)
+            self._slots[bucket] = [None, None]
+            self._slot_idx[bucket] = 0
+        idx = self._slot_idx[bucket]
+        state = self._slots[bucket][idx]
+        if state is None:  # warmup: allocate this slot's resident buffers
+            state = ServeState(
+                x=jnp.zeros(padded.shape, jnp.int32),
+                preds=jnp.zeros((bucket,), jnp.int32),
+                count=jnp.int32(0))
+        state = step_fn(state, jnp.asarray(padded))
+        self._slots[bucket][idx] = state
+        self._slot_idx[bucket] = idx ^ 1  # ping-pong
+        self.stats.n_steps += 1
+        self.stats.steps_per_bucket[bucket] = (
+            self.stats.steps_per_bucket.get(bucket, 0) + 1)
+        return state.preds
+
+    def _infer(self, x8):
+        """(bucket, F) codes -> (bucket,) predictions, selected backend."""
+        if self.backend == "kernel":
+            bucket = x8.shape[0]
+            return kops.classify(
+                x8, self._operands, self._design,
+                block_b=min(256, bucket),
+                interpret=self.interpret).astype(jnp.int32)
+        r = self._ref
+        x_p = quant.inputs_at_precision(x8[:, r["feature"]], r["bits"])
+        t_sub = r["t_int"][None, :]
+        d = (x_p > t_sub).astype(jnp.float32)
+        score = d @ r["path_t"]
+        sat = (score == r["target"][None, :]).astype(jnp.float32)
+        votes = sat @ r["cls1h"]
+        return jnp.argmax(votes, axis=1).astype(jnp.int32)
+
+    def _build_step(self, bucket: int):
+        def step(state: ServeState, x_new) -> ServeState:
+            return ServeState(x=x_new, preds=self._infer(x_new),
+                              count=state.count + 1)
+
+        donate = (0,) if self.donate else ()
+        return jax.jit(step, donate_argnums=donate)
+
+    # -- accounting --------------------------------------------------------
+
+    def compiled_buckets(self) -> list[int]:
+        return sorted(self._steps)
+
+    def compile_count(self) -> int:
+        """Total compiled step specializations across buckets — steady-state
+        serving must not grow this (`serve_bench` records the delta as
+        `compiles_after_warmup`, floor-checked at 0)."""
+        return sum(fn._cache_size() for fn in self._steps.values())

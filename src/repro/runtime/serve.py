@@ -1,65 +1,25 @@
-"""Serving runtime: batched prefill + decode loops with preallocated caches.
+"""Deprecated alias of `repro.runtime.lm_serve` (the LM decode loop).
 
-`serve_step` (one decode token against an s_max cache) is what the decode_*
-dry-run cells lower; `generate` drives a full prefill + N-token decode for
-the examples and tests.
+`repro.runtime.serve` was ambiguous once the classifier serving runtime
+landed (`repro.runtime.classify`, DESIGN.md §14): "serve" here always meant
+the LM prefill/decode loop, not serving searched tree designs. Import
+`repro.runtime.lm_serve` for the LM path or `repro.runtime.classify` for
+the classifier path; this shim keeps old imports working with a
+`DeprecationWarning`.
 """
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
+import warnings
 
-from repro.models import lm
+from repro.runtime.lm_serve import (  # noqa: F401
+    generate,
+    make_prefill_step,
+    make_serve_step,
+)
 
+warnings.warn(
+    "repro.runtime.serve is deprecated: use repro.runtime.lm_serve for the "
+    "LM decode loop or repro.runtime.classify for classifier serving",
+    DeprecationWarning, stacklevel=2)
 
-def make_prefill_step(cfg, rules=None):
-    def prefill_step(params, batch):
-        return lm.prefill(params, cfg, batch, rules=rules)
-    return prefill_step
-
-
-def make_serve_step(cfg, rules=None):
-    """One-token decode: (params, token (B,1), caches, pos) -> (logits, caches)."""
-    def serve_step(params, token, caches, pos):
-        return lm.decode_step(params, cfg, token, caches, pos, rules=rules)
-    return serve_step
-
-
-def generate(params, cfg, prompt_batch, n_tokens: int, s_max: int,
-             rules=None, greedy: bool = True, key=None,
-             temperature: float = 1.0):
-    """Prefill the prompt then decode exactly `n_tokens` autoregressively.
-
-    greedy=True: argmax decoding (`key` ignored). greedy=False: temperature
-    sampling via `jax.random.categorical` — `key` is required and is split
-    once per generated token, so the same key reproduces the same sequence.
-    Returns (B, n_tokens) int32; `n_tokens=0` returns an empty (B, 0) array.
-    """
-    if n_tokens <= 0:
-        return jnp.zeros((prompt_batch["tokens"].shape[0], 0), jnp.int32)
-    if not greedy and key is None:
-        raise ValueError("greedy=False sampling requires a PRNG `key`")
-
-    def pick(logits, k):
-        lg = logits[:, -1, :cfg.vocab_size]
-        if greedy:
-            return jnp.argmax(lg, axis=-1).astype(jnp.int32)[:, None]
-        lg = lg.astype(jnp.float32) / jnp.maximum(temperature, 1e-6)
-        return jax.random.categorical(k, lg, axis=-1).astype(jnp.int32)[:, None]
-
-    keys = (jax.random.split(key, n_tokens) if not greedy
-            else [None] * n_tokens)
-    logits, caches = lm.prefill(params, cfg, prompt_batch, rules=rules)
-    caches = lm.extend_caches(cfg, caches, s_max)
-    prompt_len = prompt_batch["tokens"].shape[1] + (
-        prompt_batch.get("prefix_embed").shape[1]
-        if prompt_batch.get("prefix_embed") is not None else 0)
-
-    serve_step = jax.jit(make_serve_step(cfg, rules))
-    tok = pick(logits, keys[0])
-    out = [tok]
-    for i in range(n_tokens - 1):
-        logits, caches = serve_step(params, tok, caches, jnp.int32(prompt_len + i))
-        tok = pick(logits, keys[i + 1])
-        out.append(tok)
-    return jnp.concatenate(out, axis=1)
+__all__ = ["generate", "make_prefill_step", "make_serve_step"]

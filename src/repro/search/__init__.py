@@ -49,8 +49,13 @@ from repro.search.sweep import (
     build_problems,
     pad_problem,
     plan_buckets,
+    round_up_pow2,
     run_sweep,
     write_sweep_report,
+)
+from repro.search.artifact import (
+    ParetoArtifact,
+    load_pareto_artifact,
 )
 
 __all__ = [
@@ -78,6 +83,9 @@ __all__ = [
     "build_problems",
     "pad_problem",
     "plan_buckets",
+    "round_up_pow2",
     "run_sweep",
     "write_sweep_report",
+    "ParetoArtifact",
+    "load_pareto_artifact",
 ]

@@ -4,6 +4,14 @@
     PYTHONPATH=src python -m repro.search --dataset seeds --trees 4 \
         --backend kernel --pop 64 --gens 40 --out runs/seeds_forest
     PYTHONPATH=src python -m repro.search sweep --datasets all --report
+    PYTHONPATH=src python -m repro.search serve --pareto OUT/pareto.json
+
+The `serve` subcommand loads a searched design back out of `pareto.json`
+and serves feature-vector queries through `runtime.classify.ClassifyServer`
+(power-of-two batch buckets + donated ping-pong buffers, DESIGN.md §14),
+asserting the served accuracy reproduces the artifact's recorded point and
+— with `--verify-netlist` — that every prediction is bit-exact against the
+gate-level netlist simulator.
 
 The `sweep` subcommand runs the paper's whole multi-dataset campaign as a
 handful of vmapped programs (DESIGN.md §11): problems are padded to bucket
@@ -143,12 +151,130 @@ def sweep_main(argv=None) -> None:
     print(f"artifacts: {args.out}/<dataset>/pareto.json")
 
 
+def serve_main(argv=None) -> None:
+    """`python -m repro.search serve`: serve a pareto.json design under load.
+
+    Loads a `pareto.json` point (the artifact is self-contained —
+    DESIGN.md §14), stands up `runtime.classify.ClassifyServer`, and
+    serves the recorded dataset's test split in request batches: reports
+    throughput and the served accuracy, asserts it matches the artifact's
+    recorded per-point accuracy, and with `--verify-netlist` additionally
+    asserts every served prediction bit-exact against the gate-level
+    netlist simulator (the serving oracle triangle).
+    """
+    import sys
+    import time
+
+    from repro.core import netlist
+    from repro.runtime.classify import BACKENDS as SERVE_BACKENDS
+    from repro.runtime.classify import ClassifyServer
+
+    ap = argparse.ArgumentParser(prog="python -m repro.search serve")
+    ap.add_argument("--pareto", required=True,
+                    help="path to a pareto.json written by run_search/sweep")
+    ap.add_argument("--point", default="best",
+                    help="pareto point index, or 'best' = smallest area "
+                         "within --max-loss")
+    ap.add_argument("--max-loss", type=float, default=0.01)
+    ap.add_argument("--dataset", default=None,
+                    help="dataset whose test split to serve (default: the "
+                         "artifact's recorded dataset)")
+    ap.add_argument("--backend", default="kernel", choices=SERVE_BACKENDS,
+                    help="kernel = fused Pallas inference; reference = "
+                         "pure-jnp predict_votes dataflow")
+    ap.add_argument("--batch", type=int, default=64,
+                    help="request size: the test split is served in batches "
+                         "of this many feature vectors")
+    ap.add_argument("--max-batch", type=int, default=1024,
+                    help="largest power-of-two batch bucket")
+    ap.add_argument("--repeats", type=int, default=1,
+                    help="serve the test split this many times (throughput "
+                         "measurement)")
+    ap.add_argument("--verify-netlist", action="store_true",
+                    help="simulate the served design's gate-level netlist "
+                         "over every served batch and assert bit-exactness")
+    ap.add_argument("--compilation-cache", default=None, metavar="DIR",
+                    help="persistent XLA compilation cache directory")
+    args = ap.parse_args(argv)
+    if args.compilation_cache:
+        from repro.runtime import compile_cache
+        compile_cache.enable(args.compilation_cache)
+
+    artifact = search.load_pareto_artifact(args.pareto)
+    point = args.point if args.point == "best" else int(args.point)
+    server = ClassifyServer.from_artifact(
+        artifact, point=point, max_loss=args.max_loss,
+        backend=args.backend, max_batch=args.max_batch)
+    idx = server.point_index
+    pt = artifact.points[idx]
+    print(f"== serving {args.pareto} point {idx}: "
+          f"{artifact.n_trees} tree(s), {artifact.n_comparators} "
+          f"comparators, acc_loss={pt['acc_loss']:+.4f} "
+          f"norm_area={pt['norm_area']:.3f} backend={args.backend} ==")
+
+    dataset = args.dataset or artifact.dataset
+    if dataset is None:
+        ap.error("--dataset required: this artifact predates the recorded "
+                 "'dataset' label")
+    ds = load_dataset(dataset)
+    codes = server.featurize(ds.x_test)
+    y = ds.y_test.astype(np.int64)
+
+    circuit = None
+    if args.verify_netlist:
+        bits, t_int = artifact.point_design(idx)
+        circuit = netlist.build_circuit(artifact.ptrees(), bits, t_int,
+                                        artifact.n_classes)
+
+    n = codes.shape[0]
+    preds = np.zeros(n, np.int64)
+    n_requests = 0
+    n_verified = 0
+    t0 = time.perf_counter()
+    for _ in range(max(1, args.repeats)):
+        for lo in range(0, n, args.batch):
+            chunk = codes[lo:lo + args.batch]
+            out = server.classify_codes(chunk)
+            preds[lo:lo + args.batch] = out
+            n_requests += 1
+            if circuit is not None:
+                sim = np.asarray(netlist.simulate(circuit, chunk))
+                if not np.array_equal(sim, out):
+                    print(f"FAIL: request at rows [{lo}, {lo + len(out)}) "
+                          f"diverges from the netlist oracle on "
+                          f"{int((sim != out).sum())} rows")
+                    sys.exit(1)
+                n_verified += len(out)
+    wall = time.perf_counter() - t0
+
+    acc = float((preds == y).mean())
+    recorded = artifact.point_accuracy(idx)
+    total = n * max(1, args.repeats)
+    print(f"served {total} samples in {n_requests} requests "
+          f"({wall:.3f}s, {total / max(wall, 1e-9):,.0f} samples/s, "
+          f"{n_requests / max(wall, 1e-9):,.0f} requests/s)")
+    print(f"buckets compiled: {server.compiled_buckets()} "
+          f"(steps per bucket: {server.stats.steps_per_bucket})")
+    print(f"served accuracy on {dataset} test split: {acc:.4f} "
+          f"(artifact recorded {recorded:.4f})")
+    if abs(acc - recorded) > 1e-6:
+        print(f"FAIL: served accuracy {acc:.6f} != recorded "
+              f"{recorded:.6f} — the loaded design does not reproduce "
+              f"the searched point")
+        sys.exit(1)
+    if circuit is not None:
+        print(f"netlist oracle: {n_verified} served predictions bit-exact "
+              f"vs the gate-level simulation")
+
+
 def main(argv=None) -> None:
     import sys
 
     argv = list(sys.argv[1:] if argv is None else argv)
     if argv and argv[0] == "sweep":
         return sweep_main(argv[1:])
+    if argv and argv[0] == "serve":
+        return serve_main(argv[1:])
     ap = argparse.ArgumentParser(prog="python -m repro.search")
     ap.add_argument("--dataset", default="seeds",
                     choices=sorted(DATASET_SPECS))
@@ -217,7 +343,7 @@ def main(argv=None) -> None:
     cfg = search.SearchConfig(
         backend=args.backend, block_p=args.block_p, pop_size=args.pop,
         n_generations=args.gens, seed=args.seed, mesh=args.mesh,
-        out_dir=args.out,
+        dataset=args.dataset, out_dir=args.out,
         checkpoint_every=args.checkpoint_every, resume=args.resume,
         migrate_every=args.migrate_every, n_migrate=args.n_migrate,
         emit_rtl=args.emit_rtl, verify_rtl=args.verify_rtl,

@@ -63,6 +63,9 @@ class SearchConfig:
     migrate_every: int = 5
     n_migrate: int = 4
     # artifacts / checkpointing
+    dataset: str | None = None      # dataset label recorded in pareto.json so
+                                    # `python -m repro.search serve` can find
+                                    # the matching test split by itself
     out_dir: str | None = None
     checkpoint_every: int = 0       # generations between saves; 0 = off
     resume: bool = False
@@ -404,7 +407,8 @@ def run_search(problem: SearchProblem, cfg: SearchConfig | None = None,
     )
     if cfg.out_dir:
         write_pareto_artifact(problem, result, cfg.out_dir,
-                              emit_rtl=cfg.emit_rtl, verify_rtl=cfg.verify_rtl)
+                              emit_rtl=cfg.emit_rtl, verify_rtl=cfg.verify_rtl,
+                              dataset=cfg.dataset)
     return result
 
 
@@ -434,21 +438,28 @@ def netlist_area_ratios(points) -> list[float]:
 
 def write_pareto_artifact(problem: SearchProblem, result: SearchResult,
                           out_dir: str, *, emit_rtl: bool = False,
-                          verify_rtl: bool = False) -> str:
+                          verify_rtl: bool = False,
+                          dataset: str | None = None) -> str:
     """pareto.json: objectives + genes + decoded designs + hardware artifact.
 
     Every point records the decoded `bits`/`margin` AND the substituted
     integer thresholds `t_int` (plus the top-level trained float `threshold`
-    array), so a design re-materializes into RTL from the artifact alone; the
-    additive-LUT `area_mm2` estimate is paired with the synthesized-netlist
-    `area_netlist_mm2` (gate counts after CSE/constant propagation) — the
-    paper's Fig. 5 estimated-vs-actual gap as a measured artifact.
+    array AND the full super-tree leaf layout — `path`, `path_len`, `n_neg`,
+    `leaf_class`), so a design re-materializes into RTL or a serving runtime
+    from the artifact alone (`search.load_pareto_artifact`, DESIGN.md §14);
+    the additive-LUT `area_mm2` estimate is paired with the
+    synthesized-netlist `area_netlist_mm2` (gate counts after CSE/constant
+    propagation) — the paper's Fig. 5 estimated-vs-actual gap as a measured
+    artifact. The payload round-trips through the shared
+    `search.artifact` schema validation, so writer and loader cannot drift.
 
     emit_rtl: write each point's Verilog (tree or forest) under OUT/rtl/.
     verify_rtl: simulate each point's netlist over the full test set and
     assert bit-exactness against `predict_votes` and the kernel backend.
+    dataset: optional dataset label recorded for the serving CLI.
     """
     from repro.core import netlist, rtl
+    from repro.search import artifact as _artifact
     from repro.search.problem import predict_votes, problem_ptrees
 
     os.makedirs(out_dir, exist_ok=True)
@@ -511,11 +522,18 @@ def write_pareto_artifact(problem: SearchProblem, result: SearchResult,
         "feature": np.asarray(problem.feature).tolist(),
         "threshold": np.asarray(problem.threshold, np.float64)
                        .round(8).tolist(),
+        "path": np.asarray(problem.path).tolist(),
+        "path_len": np.asarray(problem.path_len).tolist(),
+        "n_neg": np.asarray(problem.n_neg).tolist(),
+        "leaf_class": np.asarray(problem.leaf_class).tolist(),
         "exact_accuracy": problem.exact_accuracy,
         "exact_area_mm2": problem.exact_area_mm2,
         "rtl_verified": bool(verify_rtl),
         "pareto": points,
     }
+    if dataset is not None:
+        payload["dataset"] = dataset
+    _artifact.validate_payload(payload, where="write_pareto_artifact")
     path = os.path.join(out_dir, "pareto.json")
     tmp = path + ".tmp"
     with open(tmp, "w") as f:

@@ -120,13 +120,22 @@ jax.tree_util.register_pytree_node(
 )
 
 
-def _round_up_pow2(n: int, granule: int = GRANULE) -> int:
-    """Next power of two >= max(n, granule): the bucket boundary per axis."""
+def round_up_pow2(n: int, granule: int = GRANULE) -> int:
+    """Next power of two >= max(n, granule): the bucket boundary per axis.
+
+    Shared by the sweep's shape buckets and the serving runtime's request
+    micro-batching (`runtime.classify`, DESIGN.md §14) — one rounding rule
+    means a served batch and a sweep problem land on the same grid of
+    compiled shapes.
+    """
     n = max(int(n), int(granule))
     p = 1
     while p < n:
         p <<= 1
     return p
+
+
+_round_up_pow2 = round_up_pow2
 
 
 def problem_dims(problem: SearchProblem) -> tuple[int, int, int, int, int]:
@@ -494,7 +503,8 @@ def run_sweep(problems: dict[str, SearchProblem],
             if cfg.out_dir:
                 _engine.write_pareto_artifact(
                     problem, result, os.path.join(cfg.out_dir, name),
-                    emit_rtl=cfg.emit_rtl, verify_rtl=cfg.verify_rtl)
+                    emit_rtl=cfg.emit_rtl, verify_rtl=cfg.verify_rtl,
+                    dataset=name)
 
     return SweepResult(results=results, bucket_runs=bucket_runs,
                        wall_s=time.time() - t0)

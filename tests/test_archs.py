@@ -10,7 +10,7 @@ import pytest
 from repro.configs import ARCH_IDS, get_config, reduced_config, shapes_for
 from repro.data import SyntheticLMData
 from repro.models import lm, transformer
-from repro.runtime import serve, train
+from repro.runtime import lm_serve as serve, train
 from repro.optim import get_optimizer
 
 

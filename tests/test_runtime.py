@@ -85,7 +85,7 @@ def serve_setup():
 
 def test_generate_zero_tokens_returns_empty(serve_setup):
     """Regression: n_tokens=0 used to return 1 token (the prefill argmax)."""
-    from repro.runtime import serve
+    from repro.runtime import lm_serve as serve
     cfg, params, batch = serve_setup
     out = serve.generate(params, cfg, batch, n_tokens=0, s_max=32)
     assert out.shape == (2, 0)
@@ -95,7 +95,7 @@ def test_generate_sampling_is_wired(serve_setup):
     """Regression: greedy/key used to be accepted but silently ignored —
     sampling degraded to argmax. Now: greedy ignores the key, sampling is
     key-deterministic, key-sensitive, and collapses to greedy as T -> 0."""
-    from repro.runtime import serve
+    from repro.runtime import lm_serve as serve
     cfg, params, batch = serve_setup
     greedy = serve.generate(params, cfg, batch, n_tokens=5, s_max=32)
     greedy_keyed = serve.generate(params, cfg, batch, n_tokens=5, s_max=32,
@@ -119,7 +119,7 @@ def test_generate_sampling_is_wired(serve_setup):
 
 
 def test_generate_sampling_requires_key(serve_setup):
-    from repro.runtime import serve
+    from repro.runtime import lm_serve as serve
     cfg, params, batch = serve_setup
     with pytest.raises(ValueError, match="key"):
         serve.generate(params, cfg, batch, n_tokens=2, s_max=32, greedy=False)

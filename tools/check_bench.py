@@ -29,6 +29,12 @@ or hand-mangled artifact fails loudly:
      pair-comparisons by exactly the shard count, a single dispatch per
      sharded run, and at least one >= SHARDED_MIN_SHARDS-way mesh row
      (deterministic — checked even in --smoke).
+  6. invariant: `serving` rows (DESIGN.md §14) must show steady-state
+     serving allocating zero new device arrays and recompiling zero step
+     programs after the ping-pong warmup, buckets on the power-of-two grid
+     covering the batch (all deterministic — checked even in --smoke), and
+     at-scale rows (batch >= SERVING_FLOOR_MIN_BATCH) keeping batched
+     serving at least at per-sample parity with batch=1 dispatches.
 
 `--smoke` validates a freshly-measured artifact in CI: schema + the
 deterministic invariants only (timing floors are meaningless on a shared
@@ -129,7 +135,33 @@ SCHEMA = {
         "dispatches_per_generation": float,
         "us_per_generation": float,
     },
+    "serving": {
+        "dataset": str,
+        "n_trees": int,
+        "n_comparators": int,
+        "n_classes": int,
+        "batch": int,
+        "bucket": int,
+        "us_featurize_per_req": float,
+        "us_batch_per_req": float,
+        "us_classify_per_req": float,
+        "us_total_per_req": float,
+        "requests_per_s": float,
+        "samples_per_s": float,
+        "batched_speedup_vs_b1": float,
+        "steady_state_new_arrays": int,
+        "compiles_after_warmup": int,
+        "n_steps": int,
+    },
 }
+
+# DESIGN.md §14: serving rows with at least this many samples per request
+# must show batched serving beating batch=1 dispatches per sample (the
+# whole point of micro-batching is amortizing the dispatch), and the
+# zero-realloc/zero-retrace steady-state invariants are deterministic —
+# enforced in --smoke too.
+SERVING_FLOOR_MIN_BATCH = 32
+SERVING_MIN_BATCHED_SPEEDUP = 1.0
 
 # DESIGN.md §13: the hierarchical sort hands each shard a (2P/S, 2P) row
 # block of the pool domination matrix — an exact S-fold split of the
@@ -215,6 +247,27 @@ def check_speedups(bench: dict, min_speedup: float, errors: list[str]) -> None:
             "fitness_pipeline: no row reaches FITNESS_FLOOR_MIN_WORK="
             f"{FITNESS_FLOOR_MIN_WORK} — the section must include a "
             "timing-stable at-scale row (e.g. pendigits)")
+    batched_rows = 0
+    for i, row in enumerate(bench.get("serving", [])):
+        if not isinstance(row, dict):
+            continue
+        batch = row.get("batch", 0)
+        speedup = row.get("batched_speedup_vs_b1")
+        if (not isinstance(batch, int)
+                or not isinstance(speedup, (int, float))
+                or batch < SERVING_FLOOR_MIN_BATCH):
+            continue
+        batched_rows += 1
+        if speedup < SERVING_MIN_BATCHED_SPEEDUP:
+            errors.append(
+                f"serving[{i}] ({row.get('dataset')}[{row.get('n_trees')}] "
+                f"batch={batch}): batched_speedup_vs_b1={speedup:.3f} < "
+                f"{SERVING_MIN_BATCHED_SPEEDUP} — micro-batched serving no "
+                f"longer amortizes the per-request dispatch (DESIGN.md §14)")
+    if bench.get("serving") and batched_rows == 0:
+        errors.append(
+            f"serving: no row reaches batch >= {SERVING_FLOOR_MIN_BATCH} — "
+            f"the section must include an at-scale batched row")
 
 
 def check_deterministic(bench: dict, errors: list[str]) -> None:
@@ -284,6 +337,29 @@ def check_deterministic(bench: dict, errors: list[str]) -> None:
             f"{SHARDED_MIN_SHARDS} — the weak-scaling ladder must include a "
             f">= {SHARDED_MIN_SHARDS}-way mesh row (simulate devices with "
             f"XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+    for i, row in enumerate(bench.get("serving", [])):
+        if not isinstance(row, dict):
+            continue
+        who = f"serving[{i}] ({row.get('dataset')}[{row.get('n_trees')}])"
+        new_arrays = row.get("steady_state_new_arrays")
+        if isinstance(new_arrays, int) and new_arrays != 0:
+            errors.append(
+                f"{who}: steady_state_new_arrays={new_arrays} != 0 — "
+                f"steady-state serving reallocates; the donated ping-pong "
+                f"slots no longer recycle their buffers (DESIGN.md §14)")
+        recompiles = row.get("compiles_after_warmup")
+        if isinstance(recompiles, int) and recompiles != 0:
+            errors.append(
+                f"{who}: compiles_after_warmup={recompiles} != 0 — "
+                f"steady-state serving re-traces; bucket padding no longer "
+                f"keeps request shapes on the compiled grid (DESIGN.md §14)")
+        batch, bucket = row.get("batch"), row.get("bucket")
+        if isinstance(batch, int) and isinstance(bucket, int):
+            if bucket < batch or bucket < 1 or (bucket & (bucket - 1)):
+                errors.append(
+                    f"{who}: bucket={bucket} is not a power of two covering "
+                    f"batch={batch} — request micro-batching left the "
+                    f"power-of-two bucket grid (DESIGN.md §14)")
 
 
 def main(argv=None) -> int:

@@ -33,6 +33,12 @@ crowding), and the materializing `tree_infer_scores` kernel path vs the
 fused `fitness_errors` kernel — plus the *analytic* HBM bytes each kernel
 writes per fitness evaluation (O(P·B·C) vote tensor vs the O(P) error
 accumulator), which is deterministic and floor-checked in CI smoke runs.
+`ga.mlp_*` rows measure the printed-MLP family's fitness routes
+(DESIGN.md §15): pure-jnp reference vs the fused `qmatmul` route that
+evaluates the whole population's first layer as ONE int8 Pallas launch,
+with the analytic layer-1 weight-stream bytes (int8 tiles dequantized
+on-chip vs the f32 table gather) floor-checked in CI smoke runs.
+
 Results are also emitted as a BENCH_search.json artifact (see
 `write_artifact` / benchmarks.run).
 """
@@ -347,6 +353,47 @@ def run_fitness_pipeline(specs=FITNESS_SPECS, pop=64):
     return rows
 
 
+MLP_FITNESS_SPECS = (("seeds", 8), ("vertebral", 8))
+
+
+def run_mlp_fitness(specs=MLP_FITNESS_SPECS, pop=64):
+    """Printed-MLP family fitness rows (DESIGN.md §15): the pure-jnp
+    reference route vs the fused `kops.qmatmul` route (the population's
+    first layer as ONE int8 Pallas launch), plus the *analytic* layer-1
+    weight-stream traffic of each — the qmatmul streams the gathered
+    per-chromosome W1 stack as int8 (1 byte/weight, dequantized on-chip
+    per tile) where the reference einsum reads the f32 gather
+    (4 bytes/weight). The byte counts are deterministic and floor-checked
+    in CI smoke runs; the timing ratio is recorded, not gated — on CPU
+    the kernel leg runs in Pallas interpret mode and the ratio says
+    nothing about TPU behavior."""
+    from repro.families import printed_mlp as pm
+
+    rows = []
+    for name, n_hidden in specs:
+        prob = pm.build_problem(name, n_hidden=n_hidden)
+        genes = jax.random.uniform(jax.random.PRNGKey(0), (pop, prob.n_genes))
+        f_ref = pm.make_reference_fitness(prob)
+        f_ker = pm.make_kernel_fitness(prob)
+        t_ref, t_ker = _timeit_pair(f_ref, f_ker, (genes,), (genes,),
+                                    trials=2, min_batch_s=0.0)
+        w1_words = pop * prob.n_features * prob.n_hidden
+        rows.append({
+            "dataset": name,
+            "n_features": prob.n_features,
+            "n_hidden": prob.n_hidden,
+            "n_classes": prob.n_classes,
+            "n_samples": int(prob.x8.shape[0]),
+            "us_per_chromosome_ref": 1e6 * t_ref / pop,
+            "us_per_chromosome_kernel": 1e6 * t_ker / pop,
+            "kernel_speedup_vs_ref": t_ref / t_ker,
+            "w1_stream_bytes_per_eval_ref": 4 * w1_words,
+            "w1_stream_bytes_per_eval_kernel": w1_words,
+            "w1_stream_reduction": 4.0,
+        })
+    return rows
+
+
 def _scores_kernel_fitness(problem):
     """The pre-§12 kernel fitness: `tree_infer_scores` materializes the
     (P, B, C) vote tensor to HBM, argmax + label compare + area decode run
@@ -474,7 +521,7 @@ def run_sharded(dataset="seeds", pop_per_shard=32, gens=8,
 
 def write_artifact(tree_rows=None, forest_rows=None, dispatch_rows=None,
                    fitness_rows=None, sharded_rows=None, serving_rows=None,
-                   path=ARTIFACT) -> str:
+                   mlp_fitness_rows=None, path=ARTIFACT) -> str:
     """Emit BENCH_search.json: the search-engine throughput artifact.
 
     Sections passed as None are carried over from an existing artifact at
@@ -492,6 +539,7 @@ def write_artifact(tree_rows=None, forest_rows=None, dispatch_rows=None,
         "fitness_pipeline": [],
         "sharded_search": [],
         "serving": [],
+        "mlp_fitness": [],
     }
     try:
         with open(path) as f:
@@ -505,7 +553,8 @@ def write_artifact(tree_rows=None, forest_rows=None, dispatch_rows=None,
                     ("dispatch_per_generation", dispatch_rows),
                     ("fitness_pipeline", fitness_rows),
                     ("sharded_search", sharded_rows),
-                    ("serving", serving_rows)):
+                    ("serving", serving_rows),
+                    ("mlp_fitness", mlp_fitness_rows)):
         if rows is not None:
             payload[k] = rows
     os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
@@ -529,6 +578,17 @@ def _print_fitness_rows(fitness_rows):
               f"({r['hbm_write_reduction']:.0f}x)")
 
 
+def _print_mlp_rows(mlp_rows):
+    for r in mlp_rows:
+        print(f"ga.mlp_{r['dataset']}[h={r['n_hidden']}]: "
+              f"ref={r['us_per_chromosome_ref']:.1f}us "
+              f"kernel={r['us_per_chromosome_kernel']:.1f}us /chromosome "
+              f"({r['kernel_speedup_vs_ref']:.2f}x); W1 stream/eval "
+              f"{r['w1_stream_bytes_per_eval_ref']} -> "
+              f"{r['w1_stream_bytes_per_eval_kernel']} bytes "
+              f"({r['w1_stream_reduction']:.0f}x)")
+
+
 def _print_sharded_rows(sharded_rows):
     for r in sharded_rows:
         print(f"ga.sharded_{r['dataset']}[S={r['n_shards']}]: "
@@ -540,13 +600,22 @@ def _print_sharded_rows(sharded_rows):
               f"{r['us_per_generation']:.1f}us/generation")
 
 
-def main(quick=False, fitness_only=False, sharded_only=False, out=None):
+def main(quick=False, fitness_only=False, sharded_only=False, mlp_only=False,
+         out=None):
     """``--quick`` shrinks budgets; ``--fitness-only`` / ``--sharded-only``
-    run just the §12 / §13 rows (the CI smoke modes) — with ``--out`` the
-    artifact lands there instead of the committed BENCH_search.json, and
-    either partial mode carries the unmeasured sections over from whatever
-    artifact already sits at the target path."""
+    / ``--mlp-only`` run just the §12 / §13 / §15 rows (the CI smoke modes)
+    — with ``--out`` the artifact lands there instead of the committed
+    BENCH_search.json, and any partial mode carries the unmeasured sections
+    over from whatever artifact already sits at the target path."""
     path_kw = {"path": out} if out else {}
+    if mlp_only:
+        mlp_rows = run_mlp_fitness(
+            specs=(("seeds", 4),) if quick else MLP_FITNESS_SPECS,
+            pop=16 if quick else 64)
+        path = write_artifact(mlp_fitness_rows=mlp_rows, **path_kw)
+        _print_mlp_rows(mlp_rows)
+        print(f"artifact: {path}")
+        return
     if fitness_only:
         fitness_rows = run_fitness_pipeline(
             specs=(("seeds", 1), ("seeds", 2)) if quick else FITNESS_SPECS,
@@ -572,8 +641,11 @@ def main(quick=False, fitness_only=False, sharded_only=False, out=None):
         pop=32 if quick else 64)
     sharded_rows = run_sharded(pop_per_shard=16 if quick else 32,
                                gens=4 if quick else 8)
+    mlp_rows = run_mlp_fitness(
+        specs=(("seeds", 4),) if quick else MLP_FITNESS_SPECS,
+        pop=16 if quick else 64)
     path = write_artifact(tree_rows, forest_rows, dispatch_rows, fitness_rows,
-                          sharded_rows, **path_kw)
+                          sharded_rows, mlp_fitness_rows=mlp_rows, **path_kw)
     for r in tree_rows:
         print(f"ga.{r['dataset']}: ref={r['us_per_chromosome_ref']:.1f}us "
               f"kernel={r['us_per_chromosome_kernel']:.1f}us /chromosome")
@@ -592,6 +664,7 @@ def main(quick=False, fitness_only=False, sharded_only=False, out=None):
               f"{r['chunked_speedup']:.2f}x)")
     _print_fitness_rows(fitness_rows)
     _print_sharded_rows(sharded_rows)
+    _print_mlp_rows(mlp_rows)
     print(f"artifact: {path}")
 
 
@@ -605,9 +678,12 @@ if __name__ == "__main__":
                     help="only the §13 sharded_search rows (CI multi-device "
                          "smoke; run under "
                          "XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+    ap.add_argument("--mlp-only", action="store_true",
+                    help="only the §15 printed-MLP fitness rows (CI smoke)")
     ap.add_argument("--out", default=None,
                     help="artifact path (default: the committed "
                          "BENCH_search.json)")
     args = ap.parse_args()
     main(quick=args.quick, fitness_only=args.fitness_only,
-         sharded_only=args.sharded_only, out=args.out)
+         sharded_only=args.sharded_only, mlp_only=args.mlp_only,
+         out=args.out)

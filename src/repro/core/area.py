@@ -125,6 +125,57 @@ def build_area_unit_lut() -> tuple[np.ndarray, np.ndarray]:
     return np.concatenate(chunks), offsets
 
 
+# --- printed-MLP MAC / activation cells (DESIGN.md §15) ---------------------
+# A MAC term is lowered as shifted-copy rows through ripple full adders (the
+# §10 `full_add` cell: 2 XOR2 + 2 AND2 + 1 OR2); a negative weight costs one
+# extra adder row (two's-complement add of the inverted operand). The
+# activation cell (ReLU / argmax compare leg) is priced per accumulator bit:
+# one compare stage (XOR2 + 2 AND2 + OR2 + NOT) per bit. All constants are
+# integer multiples of AREA_QUANTUM_MM2, so MLP areas sum in exact integer
+# quanta exactly like comparator areas — the property the vmapped sweep
+# fitness relies on (DESIGN.md §11).
+AREA_FA_MM2 = 2 * AREA_XOR2_MM2 + 2 * AREA_AND2_MM2 + AREA_OR2_MM2
+AREA_ACT_BIT_MM2 = AREA_XOR2_MM2 + 2 * AREA_AND2_MM2 + AREA_OR2_MM2 + AREA_NOT_MM2
+_FA_UNITS = round(AREA_FA_MM2 / AREA_QUANTUM_MM2)
+_ACT_BIT_UNITS = round(AREA_ACT_BIT_MM2 / AREA_QUANTUM_MM2)
+assert abs(_FA_UNITS * AREA_QUANTUM_MM2 - AREA_FA_MM2) < 1e-9
+assert abs(_ACT_BIT_UNITS * AREA_QUANTUM_MM2 - AREA_ACT_BIT_MM2) < 1e-9
+
+
+def mac_area_units(code: int, in_bits: int) -> int:
+    """One integer-weight MAC term as exact AREA_QUANTUM_MM2 quanta.
+
+    `code` is the effective signed weight; each set bit of |code| is one
+    shifted-copy adder row of `in_bits` full adders, and a negative weight
+    adds one subtractor row. A zero weight is free wire."""
+    c = int(code)
+    if c == 0:
+        return 0
+    rows = bin(abs(c)).count("1") + (1 if c < 0 else 0)
+    return rows * int(in_bits) * _FA_UNITS
+
+
+def mac_area_mm2(code: int, in_bits: int) -> float:
+    return mac_area_units(code, in_bits) * AREA_QUANTUM_MM2
+
+
+def act_area_units(acc_bits: int) -> int:
+    """Activation cell (ReLU zero-mux or argmax compare leg) in quanta."""
+    return int(acc_bits) * _ACT_BIT_UNITS
+
+
+def act_area_mm2(acc_bits: int) -> float:
+    return act_area_units(acc_bits) * AREA_QUANTUM_MM2
+
+
+def mlp_neuron_area_units(codes, in_bits: int, acc_bits: int) -> int:
+    """Area of one printed-MLP neuron: its MAC terms + one activation cell."""
+    import numpy as np
+    codes = np.asarray(codes).ravel()
+    return (sum(mac_area_units(int(c), in_bits) for c in codes.tolist())
+            + act_area_units(acc_bits))
+
+
 def gate_area_mm2(n_and: int = 0, n_or: int = 0, n_not: int = 0,
                   n_xor: int = 0) -> float:
     """Area of an explicit gate inventory (the netlist oracle, DESIGN.md §10).

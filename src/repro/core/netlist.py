@@ -230,6 +230,34 @@ class NetlistBuilder:
         return [self.one if (value >> i) & 1 else self.zero
                 for i in range(width)]
 
+    def sub(self, a_bits: list[int], b_bits: list[int]) -> list[int]:
+        """Unsigned a - b over LSB-first vectors as ``a + ~b + 1``.
+
+        Valid (wrap-free) only when a >= b; callers mask the result behind a
+        `gt`/`mux_vec` select so the wrapped case is never observed — the
+        printed-MLP ReLU cell does exactly that (DESIGN.md §15)."""
+        n = max(len(a_bits), len(b_bits))
+        a_bits = list(a_bits) + [self.zero] * (n - len(a_bits))
+        b_bits = list(b_bits) + [self.zero] * (n - len(b_bits))
+        out, carry = [], self.one          # +1 of the two's complement
+        for x, y in zip(a_bits, b_bits):
+            s, carry = self.full_add(x, self.not_(y), carry)
+            out.append(s)
+        return out                          # final carry dropped (a >= b)
+
+    def sum_vecs(self, vecs: list) -> list[int]:
+        """Balanced adder tree over LSB-first bit-vectors (MAC accumulate)."""
+        if not vecs:
+            return [self.zero]
+        vecs = [list(v) for v in vecs]
+        while len(vecs) > 1:
+            nxt = [self.add(vecs[i], vecs[i + 1])
+                   for i in range(0, len(vecs) - 1, 2)]
+            if len(vecs) % 2:
+                nxt.append(vecs[-1])
+            vecs = nxt
+        return vecs[0]
+
 
 # ---------------------------------------------------------------------------
 # cells: the structure `core.rtl` prints and the simulator verifies
@@ -349,6 +377,115 @@ def build_circuit(ptrees, bits, t_int, n_classes: int) -> Circuit:
         b=np.asarray(nb.b, np.int32),
         out_bits=tuple(out[:n_bits]),
         trees=trees,
+        n_classes=int(n_classes),
+    )
+
+
+# ---------------------------------------------------------------------------
+# printed-MLP cells (DESIGN.md §15): MAC rows + ReLU + signed argmax
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class MacNeuronCell:
+    """One integer-weight neuron: shifted-copy MAC rows + an activation cell.
+
+    The signed accumulator is kept as an unsigned (pos, neg) pair — positive
+    and negative MAC contributions summed separately — so no sign bit ever
+    exists in hardware: ReLU is ``pos > neg ? pos - neg : 0`` and the output
+    argmax compares ``pos_c + neg_best`` against ``pos_best + neg_c``."""
+
+    weights: list       # effective signed integer weights, one per input
+    relu: bool          # hidden neurons apply ReLU + the static right shift
+    pos: list           # unsigned positive-sum wires, LSB first
+    neg: list           # unsigned negative-sum wires, LSB first
+    out: list           # activation output wires (ReLU'd + shifted), LSB first
+
+
+@dataclasses.dataclass
+class MlpCells:
+    hidden: list        # [MacNeuronCell], ReLU outputs feed the next layer
+    outputs: list       # [MacNeuronCell], (pos, neg) pairs feed the argmax
+    shift: int          # static right shift applied after every ReLU
+
+
+def _mac_rows(nb: NetlistBuilder, in_vecs, weights):
+    """Split a neuron's MAC terms into (positive, negative) shifted-copy rows.
+
+    Each set bit s of |w| contributes the input vector shifted left by s
+    (free wire: s leading CONST0s); the sign of w routes the row to the
+    positive or negative accumulator."""
+    pos, neg = [], []
+    for vec, w in zip(in_vecs, weights):
+        w = int(w)
+        if w == 0:
+            continue
+        dst = pos if w > 0 else neg
+        mag, s = abs(w), 0
+        while mag:
+            if mag & 1:
+                dst.append([nb.zero] * s + list(vec))
+            mag >>= 1
+            s += 1
+    return pos, neg
+
+
+def build_mac_neuron(nb: NetlistBuilder, in_vecs, weights, *,
+                     relu: bool, shift: int = 0) -> MacNeuronCell:
+    """Lower one integer-weight neuron into the shared builder."""
+    pos_rows, neg_rows = _mac_rows(nb, in_vecs, weights)
+    pos = nb.sum_vecs(pos_rows)
+    neg = nb.sum_vecs(neg_rows)
+    out = []
+    if relu:
+        # ReLU: pos > neg ? pos - neg : 0; `sub` wraps when pos < neg but the
+        # mux masks that case. The static right shift is free wire (bit drop).
+        sel = nb.gt(pos, neg)
+        diff = nb.mux_vec(sel, nb.sub(pos, neg), [nb.zero] * max(len(pos), len(neg)))
+        out = diff[shift:] if shift < len(diff) else [nb.zero]
+    return MacNeuronCell(list(int(w) for w in weights), relu, pos, neg, out)
+
+
+def build_mlp_circuit(w1, w2, shift: int, n_classes: int) -> Circuit:
+    """Integer-weight MLP (one hidden ReLU layer) -> verified netlist.
+
+    `w1` (F, H) and `w2` (H, C) are EFFECTIVE signed integer weight codes
+    (post-snap, rescaled to the master grid); `shift` is the static right
+    shift applied to every ReLU output. Inputs are the 8-bit master codes.
+    The argmax chain keeps first-max tie semantics (matching `jnp.argmax`)
+    by replacing the incumbent only on strict greater-than, scanning classes
+    in ascending order. Bit-exact against the tensor forward pass because
+    both sides compute exact integer arithmetic (DESIGN.md §15).
+    """
+    w1 = np.asarray(w1)
+    w2 = np.asarray(w2)
+    n_features, n_hidden = w1.shape
+    if w2.shape != (n_hidden, n_classes):
+        raise ValueError(f"w2 shape {w2.shape} != ({n_hidden}, {n_classes})")
+    nb = NetlistBuilder()
+    in_vecs = [[nb.input_bit(f, i) for i in range(MASTER_BITS)]
+               for f in range(n_features)]
+    hidden = [build_mac_neuron(nb, in_vecs, w1[:, j], relu=True, shift=shift)
+              for j in range(n_hidden)]
+    h_vecs = [cell.out for cell in hidden]
+    outputs = [build_mac_neuron(nb, h_vecs, w2[:, c], relu=False)
+               for c in range(n_classes)]
+
+    n_bits = class_bits(n_classes)
+    best_pos, best_neg = outputs[0].pos, outputs[0].neg
+    best_idx = nb.const_vec(0, n_bits)
+    for c in range(1, n_classes):
+        # s_c > s_best  <=>  pos_c + neg_best > pos_best + neg_c  (unsigned)
+        sel = nb.gt(nb.add(outputs[c].pos, best_neg),
+                    nb.add(best_pos, outputs[c].neg))
+        best_pos = nb.mux_vec(sel, outputs[c].pos, best_pos)
+        best_neg = nb.mux_vec(sel, outputs[c].neg, best_neg)
+        best_idx = nb.mux_vec(sel, nb.const_vec(c, n_bits), best_idx)
+    return Circuit(
+        op=np.asarray(nb.op, np.int8),
+        a=np.asarray(nb.a, np.int32),
+        b=np.asarray(nb.b, np.int32),
+        out_bits=tuple(best_idx[:n_bits]),
+        trees=[MlpCells(hidden, outputs, int(shift))],
         n_classes=int(n_classes),
     )
 

@@ -148,6 +148,50 @@ def emit_forest_verilog(ptrees, bits, t_int, n_classes: int | None = None,
     return "\n".join(lines) + "\n"
 
 
+def emit_circuit_verilog(circuit: nl_mod.Circuit,
+                         module_name: str = "bespoke_circuit") -> str:
+    """Emit any finished gate-level `netlist.Circuit` as structural Verilog.
+
+    The generic lowering for families whose netlists are built gate-by-gate
+    rather than from tree cells — e.g. the printed-MLP MAC/activation
+    circuits (`netlist.build_mlp_circuit`, DESIGN.md §15). One wire per
+    hash-consed gate, inputs as the 8-bit master-code ports the gate array
+    references, outputs the class-index bits LSB first. `netlist.simulate`
+    is the bit-exact software oracle for the emitted module.
+    """
+    op = np.asarray(circuit.op)
+    a = np.asarray(circuit.a)
+    b = np.asarray(circuit.b)
+    features = sorted({int(a[g]) for g in range(op.shape[0])
+                       if op[g] == nl_mod.INPUT})
+    n_out = len(circuit.out_bits)
+    lines = [
+        f"// Auto-generated bespoke gate-level circuit",
+        f"// gates={int(op.shape[0])} classes={circuit.n_classes}",
+        f"module {module_name} (",
+    ]
+    lines += [f"    input  wire [7:0] x{f}," for f in features]
+    lines += [f"    output wire [{max(n_out - 1, 0)}:0] class_out", ");"]
+    exprs = {0: "1'b0", 1: "1'b1"}  # CONST0/CONST1 are always gates 0 and 1
+    for g in range(op.shape[0]):
+        o = int(op[g])
+        if o in (nl_mod.CONST0, nl_mod.CONST1):
+            continue
+        if o == nl_mod.INPUT:
+            rhs = f"x{int(a[g])}[{int(b[g])}]"
+        elif o == nl_mod.NOT:
+            rhs = f"~{exprs[int(a[g])]}"
+        else:
+            sym = {nl_mod.AND: "&", nl_mod.OR: "|", nl_mod.XOR: "^"}[o]
+            rhs = f"{exprs[int(a[g])]} {sym} {exprs[int(b[g])]}"
+        lines.append(f"  wire g{g} = {rhs};")
+        exprs[g] = f"g{g}"
+    for i, w in enumerate(circuit.out_bits):
+        lines.append(f"  assign class_out[{i}] = {exprs[int(w)]};")
+    lines.append("endmodule")
+    return "\n".join(lines) + "\n"
+
+
 def emit_design(ptrees, bits, t_int, n_classes: int | None = None,
                 module_name: str | None = None) -> str:
     """One entry point: a single tree emits `emit_verilog`, K > 1 the forest

@@ -1,0 +1,42 @@
+"""Classifier family registry (DESIGN.md §15).
+
+`FAMILIES` maps the registry key ("tree", "mlp") to the singleton family
+object; the engine layers resolve families through the three lookups below
+instead of importing family modules directly.
+"""
+from __future__ import annotations
+
+from repro.families import printed_mlp, tree
+from repro.families.base import ClassifierFamily
+
+FAMILIES: dict[str, ClassifierFamily] = {
+    tree.FAMILY.name: tree.FAMILY,
+    printed_mlp.FAMILY.name: printed_mlp.FAMILY,
+}
+
+
+def get_family(name: str) -> ClassifierFamily:
+    """Registry-key lookup ("tree" / "mlp")."""
+    try:
+        return FAMILIES[name]
+    except KeyError:
+        raise ValueError(f"unknown classifier family {name!r}; "
+                         f"known: {sorted(FAMILIES)}") from None
+
+
+def family_of(problem) -> ClassifierFamily:
+    """The family owning a problem object (by `owns` probe)."""
+    for fam in FAMILIES.values():
+        if fam.owns(problem):
+            return fam
+    raise TypeError(f"no registered classifier family owns "
+                    f"{type(problem).__name__}")
+
+
+def family_of_payload(payload: dict) -> ClassifierFamily:
+    """The family of a pareto.json payload (absent tag -> legacy tree)."""
+    return get_family(payload.get("family", "tree"))
+
+
+__all__ = ["ClassifierFamily", "FAMILIES", "get_family", "family_of",
+           "family_of_payload", "tree", "printed_mlp"]

@@ -1,0 +1,119 @@
+"""The `ClassifierFamily` protocol (DESIGN.md §15).
+
+A *family* is one kind of printed classifier the NSGA-II engine can search:
+bespoke decision trees/forests (the source paper) or integer-weight printed
+MLPs (the sibling work, arxiv 2402.02930 / 2312.17612). The engine layers —
+`search.engine`, `search.backends`, `search.sweep`, the artifact schema,
+`runtime.classify` and both CLIs — speak only this protocol; everything
+tree-specific lives behind `families/tree.py` and everything MLP-specific
+behind `families/printed_mlp.py`.
+
+A family owns five concerns:
+
+  1. **Problem construction + genes** — `build_problem` binds a dataset to a
+     family-specific problem object; `n_genes`/`exact_genes` define the
+     real-coded [0, 1] chromosome and the exact (lossless) seed design.
+  2. **Fitness** — `make_fitness(problem, backend)` returns the population
+     fitness `(P, n_genes) -> (P, 2)` for the `reference` (pure jnp) and
+     `kernel` (fused Pallas route) backends. Both must agree bit-exactly:
+     every reduction is integer-valued in f32 (DESIGN.md §11/§12).
+  3. **Sweep padding** — `problem_dims`/`pad_problem`/`population_objectives`
+     lower the problem onto bucket-boundary shapes with *inert* padding so
+     the multi-dataset campaign can stack and vmap problems of one family
+     (`search.sweep` keys its buckets by `(family, dims)`).
+  4. **Hardware lowering** — `write_artifact` emits the validated
+     family-tagged `pareto.json` (plus per-point Verilog under `--emit-rtl`)
+     and, under `--verify-rtl`, asserts the oracle triangle per pareto
+     point: netlist sim == tensor predict == kernel backend.
+  5. **Serving** — `load_artifact` re-materializes a design from the JSON
+     alone and `make_server` stands up the bucketed
+     `runtime.classify.ClassifyServer` for it.
+
+Methods raise `NotImplementedError` here; concrete families override all of
+them. `repro.families.get_family` / `family_of` / `family_of_payload` are
+the registry lookups the engine layers use.
+"""
+from __future__ import annotations
+
+
+class ClassifierFamily:
+    """Abstract base for one searchable printed-classifier family."""
+
+    #: registry key ("tree", "mlp", ...) — also the artifact's `family` tag
+    name: str = "?"
+
+    # -- problem construction + genes -------------------------------------
+
+    def owns(self, problem) -> bool:
+        """True if `problem` is this family's problem type."""
+        raise NotImplementedError
+
+    def build_problem(self, dataset: str, **opts):
+        """Train the exact design on `dataset` and bind its test split."""
+        raise NotImplementedError
+
+    def n_genes(self, problem) -> int:
+        raise NotImplementedError
+
+    def exact_genes(self, problem):
+        """(n_genes,) chromosome decoding to the exact (lossless) design."""
+        raise NotImplementedError
+
+    def describe(self, problem) -> str:
+        """One-line problem summary for CLI headers."""
+        raise NotImplementedError
+
+    # -- fitness -----------------------------------------------------------
+
+    def make_fitness(self, problem, backend: str = "reference", **kw):
+        """Population fitness `(P, n_genes) -> (P, 2)` on `backend`."""
+        raise NotImplementedError
+
+    # -- sweep padding (DESIGN.md §11) -------------------------------------
+
+    def problem_dims(self, problem) -> tuple:
+        """Real (unpadded) operand extents — the bucket shape key."""
+        raise NotImplementedError
+
+    def pad_problem(self, problem, dims: tuple):
+        """Pad to bucket dims with inert padding; returns a stackable pytree."""
+        raise NotImplementedError
+
+    def population_objectives(self, padded, pop):
+        """(P, padded n_genes) -> (P, 2) on a padded (or stacked) context."""
+        raise NotImplementedError
+
+    def padded_n_genes(self, dims: tuple) -> int:
+        raise NotImplementedError
+
+    def padded_exact_genes(self, dims: tuple):
+        raise NotImplementedError
+
+    def unpad_genes(self, problem, genes, dims: tuple):
+        """Slice a padded population's real gene columns back out."""
+        raise NotImplementedError
+
+    def eval_cost(self, dims: tuple) -> float:
+        """Dominant per-chromosome FLOP count at padded dims (bucket merge)."""
+        raise NotImplementedError
+
+    # -- artifacts + serving (DESIGN.md §10/§14) ---------------------------
+
+    def write_artifact(self, problem, result, out_dir: str, *,
+                      emit_rtl: bool = False, verify_rtl: bool = False,
+                      dataset: str | None = None) -> str:
+        """Write the family-tagged pareto.json (+ RTL / oracle triangle)."""
+        raise NotImplementedError
+
+    def load_artifact(self, payload_or_path):
+        """Validate + materialize this family's artifact object."""
+        raise NotImplementedError
+
+    def make_server(self, artifact, point="best", max_loss: float = 0.01,
+                    **opts):
+        """Stand up a `runtime.classify.ClassifyServer` for a pareto point."""
+        raise NotImplementedError
+
+    def build_point_circuit(self, artifact, idx: int):
+        """Gate-level netlist of pareto point `idx` (the serving oracle)."""
+        raise NotImplementedError

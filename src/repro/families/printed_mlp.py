@@ -1,0 +1,799 @@
+"""The printed-MLP family: integer-weight MAC genes on the shared engine.
+
+Implements `ClassifierFamily` (DESIGN.md §15) for one-hidden-layer printed
+MLPs in the style of the sibling printed-electronics work (hardware-aware
+genetic search over discrete MLP weights, arxiv 2402.02930; bespoke
+approximate MAC/activation circuits, arxiv 2312.17612), re-using this repo's
+dual-approximation recipe end to end:
+
+  - **Master weights.** A small float MLP (no biases, ReLU hidden layer) is
+    trained deterministically per dataset, then each layer is quantized with
+    a single per-layer scale to 4-bit signed *master codes* in [-8, 7].
+    With no biases the network is positively homogeneous, so per-layer
+    scales never change the argmax — the hardware drops them entirely and
+    computes pure integer arithmetic on the 8-bit input codes.
+  - **Genes.** Two genes per *neuron* (hidden and output), exactly the
+    comparator chromosome layout: a precision gene (weight bits in
+    [2, 4] — truncation of the master code, mirroring `core.quant`'s
+    right-shift ladder) and a margin gene (snap window in [0, 5]). Margins
+    snap each truncated code to the cheapest popcount pattern within the
+    window through `quantize.bespoke.snap_lut` — the paper's
+    move-threshold-to-cheap-bit-pattern generalized from comparator
+    thresholds to MAC multiplier constants (the snap is iterated to a
+    fixpoint there, so re-snapping through the precision ladder is stable).
+  - **Decode tables.** There are only 3 x 6 = 18 (bits, margin) combos, so
+    decode is a gather: `TW1[combo, F, H]` / `TW2[combo, H, C]` hold every
+    neuron's *effective* integer weights per combo (truncate -> snap ->
+    rescale to the master grid) and `COST1`/`COST2` their area in integer
+    `AREA_QUANTUM_MM2` quanta (`core.area.mlp_neuron_area_units`: shifted-
+    copy full-adder MAC rows + one activation cell). Integer-quanta area
+    sums and integer-valued f32 accuracy sums make the fitness bit-exact
+    under any vmap tiling — the same exactness contract as the tree family
+    (DESIGN.md §11).
+  - **Exact forward in f32.** `x8f @ W1` sums products bounded by
+    255 * 8 * F < 2^24, the ReLU output is floor-shifted by a static
+    per-problem `shift` (exact: multiply by a power of two, then floor) so
+    the second layer's sums stay < 2^24 too. The fused-kernel fitness
+    routes the population's first layer through ONE `kernels.ops.qmatmul`
+    launch (weights concatenated on the output axis) and is bit-identical
+    to the reference path.
+  - **Oracle triangle.** `--verify-rtl` asserts, per pareto point,
+    netlist sim (`core.netlist.build_mlp_circuit`) == integer tensor
+    predict == kernel route, exactly as the tree family does.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import area as area_mod
+from repro.core import netlist
+from repro.families.base import ClassifierFamily
+from repro.quantize import bespoke
+
+MASTER_WBITS = 4            # master weight codes are 4-bit signed: [-8, 7]
+WB_MIN, WB_MAX = 2, 4       # precision gene range (truncations of the master)
+N_MARGINS = 6               # margin gene range [0, 5], as for comparators
+N_COMBOS = (WB_MAX - WB_MIN + 1) * N_MARGINS        # 18 decode table rows
+EXACT_COMBO = (WB_MAX - WB_MIN) * N_MARGINS         # (bits=4, margin=0)
+DEFAULT_HIDDEN = 16
+# f32-exact "minus infinity" for masking padded classes out of the argmax:
+# real scores are integers with |s| < 2^24, so -2^25 can never win
+_NEG_SENTINEL = -float(1 << 25)
+
+
+# ---------------------------------------------------------------------------
+# training + master quantization
+# ---------------------------------------------------------------------------
+
+def train_mlp(x_train, y_train, n_classes: int, n_hidden: int = DEFAULT_HIDDEN,
+              n_steps: int = 300, lr: float = 0.5, seed: int = 0):
+    """Deterministic full-batch GD on a bias-free one-hidden-layer ReLU MLP.
+
+    Returns float (w1 (F, H), w2 (H, C)). Bias-free keeps the network
+    positively homogeneous, which is what lets the integer pipeline drop
+    the quantization scales without moving the argmax.
+    """
+    x = jnp.asarray(x_train, jnp.float32)
+    y = jnp.asarray(y_train, jnp.int32)
+    n_features = x.shape[1]
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    w1 = jax.random.normal(k1, (n_features, n_hidden),
+                           jnp.float32) * n_features ** -0.5
+    w2 = jax.random.normal(k2, (n_hidden, n_classes),
+                           jnp.float32) * n_hidden ** -0.5
+
+    def loss_fn(params):
+        h = jax.nn.relu(x @ params[0])
+        logits = h @ params[1]
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.mean(logp[jnp.arange(x.shape[0]), y])
+
+    grad_fn = jax.grad(loss_fn)
+
+    def step(_, params):
+        g = grad_fn(params)
+        return tuple(p - lr * gp for p, gp in zip(params, g))
+
+    w1, w2 = jax.jit(lambda p: jax.lax.fori_loop(0, n_steps, step, p))((w1, w2))
+    return np.asarray(w1), np.asarray(w2)
+
+
+def quantize_master(w) -> np.ndarray:
+    """Float layer -> 4-bit signed master codes with ONE per-layer scale.
+
+    A single scale per layer (not per channel) preserves relative neuron
+    magnitudes, so dropping the scale is argmax-neutral for the bias-free
+    network."""
+    w = np.asarray(w, np.float64)
+    scale = max(float(np.abs(w).max()), 1e-9) / ((1 << (MASTER_WBITS - 1)) - 1)
+    lo, hi = -(1 << (MASTER_WBITS - 1)), (1 << (MASTER_WBITS - 1)) - 1
+    return np.clip(np.round(w / scale), lo, hi).astype(np.int32)
+
+
+def effective_weights(master: np.ndarray, bits, margin) -> np.ndarray:
+    """Per-column decode: truncate master codes to `bits`, snap within
+    `margin`, rescale back to the master grid. `bits`/`margin` are arrays
+    over the trailing (neuron) axis."""
+    master = np.asarray(master, np.int32)
+    bits = np.asarray(bits, np.int64)
+    margin = np.asarray(margin, np.int64)
+    out = np.zeros_like(master)
+    for j in range(master.shape[1]):
+        b, m = int(bits[j]), int(margin[j])
+        sh = MASTER_WBITS - b
+        code = master[:, j] >> sh          # arithmetic shift: round-to-floor
+        lut = bespoke.snap_lut(b, m)
+        out[:, j] = lut[code + (1 << (b - 1))] << sh
+    return out
+
+
+# ---------------------------------------------------------------------------
+# accumulator widths + decode tables
+# ---------------------------------------------------------------------------
+
+def _max_abs_w() -> int:
+    return 1 << (MASTER_WBITS - 1)
+
+
+def acc1_bound(n_features: int) -> int:
+    """Upper bound on a hidden accumulator (one sign of the (pos, neg) pair)."""
+    return 255 * _max_abs_w() * n_features
+
+
+def pick_shift(n_features: int, n_hidden: int) -> int:
+    """Smallest static ReLU right-shift keeping layer-2 sums f32-exact."""
+    sh = 0
+    while (acc1_bound(n_features) >> sh) * _max_abs_w() * n_hidden >= (1 << 24):
+        sh += 1
+    return sh
+
+
+def _acc_widths(n_features: int, n_hidden: int,
+                shift: int) -> tuple[int, int, int]:
+    """(hidden act bits, hidden out bits, output act bits) for the area model."""
+    a1 = max(1, acc1_bound(n_features).bit_length())
+    hid = max(1, (acc1_bound(n_features) >> shift).bit_length())
+    a2 = max(1, ((acc1_bound(n_features) >> shift)
+                 * _max_abs_w() * n_hidden).bit_length())
+    return a1, hid, a2
+
+
+def combo_tables(w1_master: np.ndarray, w2_master: np.ndarray, shift: int):
+    """(TW1, TW2, COST1, COST2): per-combo effective weights + area quanta.
+
+    TW1 (18, F, H) / TW2 (18, H, C) float32 hold exact small integers;
+    COST1 (18, H) / COST2 (18, C) float32 hold integer `AREA_QUANTUM_MM2`
+    counts — both exactly representable, so every fitness reduction over
+    them is bit-exact under any order (DESIGN.md §11).
+    """
+    n_features, n_hidden = w1_master.shape
+    n_classes = w2_master.shape[1]
+    a1, hid, a2 = _acc_widths(n_features, n_hidden, shift)
+    tw1 = np.zeros((N_COMBOS, n_features, n_hidden), np.float32)
+    tw2 = np.zeros((N_COMBOS, n_hidden, n_classes), np.float32)
+    cost1 = np.zeros((N_COMBOS, n_hidden), np.float32)
+    cost2 = np.zeros((N_COMBOS, n_classes), np.float32)
+    for b in range(WB_MIN, WB_MAX + 1):
+        for m in range(N_MARGINS):
+            k = (b - WB_MIN) * N_MARGINS + m
+            e1 = effective_weights(w1_master, np.full(n_hidden, b),
+                                   np.full(n_hidden, m))
+            e2 = effective_weights(w2_master, np.full(n_classes, b),
+                                   np.full(n_classes, m))
+            tw1[k] = e1.astype(np.float32)
+            tw2[k] = e2.astype(np.float32)
+            cost1[k] = [area_mod.mlp_neuron_area_units(e1[:, j], 8, a1)
+                        for j in range(n_hidden)]
+            cost2[k] = [area_mod.mlp_neuron_area_units(e2[:, c], hid, a2)
+                        for c in range(n_classes)]
+    return tw1, tw2, cost1, cost2
+
+
+# ---------------------------------------------------------------------------
+# problem objects
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class MLPOperands:
+    """The lean fitness context: a pure pytree of arrays, stackable across
+    same-shape problems for the sweep's vmapped buckets (like the tree
+    family's `PaddedProblem`). Padding is inert by construction: padded
+    hidden/output neurons carry all-zero TW/COST rows for every combo,
+    padded classes are argmax-masked with an f32-exact sentinel, padded
+    samples carry label -1 (never matched); accuracy divides by `n_valid`."""
+
+    tw1: jnp.ndarray            # (18, F, H) f32 effective integer weights
+    tw2: jnp.ndarray            # (18, H, C) f32
+    cost1: jnp.ndarray          # (18, H) f32 integer area quanta
+    cost2: jnp.ndarray          # (18, C) f32
+    x8f: jnp.ndarray            # (B, F) f32 master input codes
+    y: jnp.ndarray              # (B,) int32 (-1 on padded rows)
+    class_valid: jnp.ndarray    # (C,) bool
+    n_valid: jnp.ndarray        # () f32 real test-sample count
+    shift_scale: jnp.ndarray    # () f32 = 2^-shift (exact power of two)
+    exact_accuracy: jnp.ndarray  # () f32
+    exact_area_mm2: jnp.ndarray  # () f32
+
+
+jax.tree_util.register_pytree_node(
+    MLPOperands,
+    lambda p: (tuple(getattr(p, f.name)
+                     for f in dataclasses.fields(MLPOperands)), None),
+    lambda _, children: MLPOperands(*children),
+)
+
+
+@dataclasses.dataclass
+class MLPProblem:
+    """One dataset bound to a trained master-code MLP (host-side handle).
+
+    The jax fitness paths run on `operands` (the lean pytree); the master
+    codes + shift stay host-side for artifact writing, netlist lowering and
+    serving. NOT itself a pytree — `search.engine` only touches `n_genes`
+    and `exact_genes()`, and hands fitness construction back to the family.
+    """
+
+    w1_master: np.ndarray       # (F, H) int32 in [-8, 7]
+    w2_master: np.ndarray       # (H, C) int32
+    shift: int
+    n_classes: int
+    x8: np.ndarray              # (B, F) int32 master input codes
+    y: np.ndarray               # (B,) int32
+    exact_accuracy: float
+    exact_area_mm2: float
+    operands: MLPOperands
+
+    @property
+    def n_features(self) -> int:
+        return int(self.w1_master.shape[0])
+
+    @property
+    def n_hidden(self) -> int:
+        return int(self.w1_master.shape[1])
+
+    @property
+    def n_units(self) -> int:
+        return self.n_hidden + self.n_classes
+
+    @property
+    def n_genes(self) -> int:
+        return 2 * self.n_units
+
+    def exact_genes(self) -> np.ndarray:
+        return exact_genes(self.n_units)
+
+
+def exact_genes(n_units: int) -> np.ndarray:
+    """Chromosome decoding every neuron to (bits=4, margin=0) — the master
+    codes unchanged, i.e. the exact design (mirrors `quant.exact_genes`)."""
+    g = np.zeros(2 * n_units, np.float32)
+    g[0::2] = 0.999
+    g[1::2] = 0.0
+    return g
+
+
+def predict_master(w1, w2, shift: int, x8) -> np.ndarray:
+    """Integer tensor oracle: (B, F) master codes -> (B,) argmax class."""
+    h = np.asarray(x8, np.int64) @ np.asarray(w1, np.int64)
+    hq = np.maximum(h, 0) >> shift
+    s = hq @ np.asarray(w2, np.int64)
+    return np.argmax(s, axis=1).astype(np.int32)
+
+
+def build_problem(dataset, n_hidden: int = DEFAULT_HIDDEN,
+                  n_steps: int = 300, seed: int = 0) -> MLPProblem:
+    """Train + master-quantize the MLP for `dataset` (name or `Dataset`)."""
+    from repro.datasets import load_dataset
+    from repro.datasets.synthetic import quantize_u8
+
+    ds = load_dataset(dataset) if isinstance(dataset, str) else dataset
+    w1f, w2f = train_mlp(ds.x_train, ds.y_train, ds.n_classes,
+                         n_hidden=n_hidden, seed=seed, n_steps=n_steps)
+    w1m = quantize_master(w1f)
+    w2m = quantize_master(w2f)
+    n_features = ds.x_train.shape[1]
+    if acc1_bound(n_features) >= (1 << 24):
+        raise ValueError(
+            f"{n_features} features overflow the f32-exact hidden "
+            f"accumulator bound (needs 255*8*F < 2^24)")
+    shift = pick_shift(n_features, n_hidden)
+    tw1, tw2, cost1, cost2 = combo_tables(w1m, w2m, shift)
+
+    x8 = quantize_u8(ds.x_test).astype(np.int32)
+    y = np.asarray(ds.y_test, np.int32)
+    pred = predict_master(w1m, w2m, shift, x8)
+    # f32 arithmetic on the host so the exact chromosome scores EXACTLY
+    # (0, 1) against the jnp fitness (f32 division / quantum multiply)
+    exact_acc = float(np.float32((pred == y).sum())
+                      / np.float32(x8.shape[0]))
+    exact_units = float(cost1[EXACT_COMBO].sum() + cost2[EXACT_COMBO].sum())
+    exact_area = max(float(np.float32(exact_units)
+                           * np.float32(area_mod.AREA_QUANTUM_MM2)), 1e-9)
+
+    operands = MLPOperands(
+        tw1=jnp.asarray(tw1), tw2=jnp.asarray(tw2),
+        cost1=jnp.asarray(cost1), cost2=jnp.asarray(cost2),
+        x8f=jnp.asarray(x8, jnp.float32), y=jnp.asarray(y),
+        class_valid=jnp.ones(ds.n_classes, bool),
+        n_valid=jnp.float32(x8.shape[0]),
+        shift_scale=jnp.float32(2.0 ** -shift),
+        exact_accuracy=jnp.float32(exact_acc),
+        exact_area_mm2=jnp.float32(exact_area),
+    )
+    return MLPProblem(
+        w1_master=w1m, w2_master=w2m, shift=shift, n_classes=ds.n_classes,
+        x8=x8, y=y, exact_accuracy=exact_acc, exact_area_mm2=exact_area,
+        operands=operands)
+
+
+# ---------------------------------------------------------------------------
+# gene decode + fitness (reference and fused-kernel routes)
+# ---------------------------------------------------------------------------
+
+def decode_combos(genes):
+    """(..., 2U) genes -> (..., U) int32 decode-table rows (18 combos).
+
+    Per unit: bits = WB_MIN + clip(floor(g_bits * 3), 0, 2) and
+    margin = clip(floor(g_margin * 6), 0, 5) — the comparator decode
+    conventions of `core.quant.decode_genes` at the MLP's ranges."""
+    span = WB_MAX - WB_MIN + 1
+    gb, gm = genes[..., 0::2], genes[..., 1::2]
+    bits = jnp.clip(jnp.floor(gb * span), 0, span - 1)
+    marg = jnp.clip(jnp.floor(gm * N_MARGINS), 0, N_MARGINS - 1)
+    return (bits * N_MARGINS + marg).astype(jnp.int32)
+
+
+def decode_design(genes) -> tuple[np.ndarray, np.ndarray]:
+    """Host decode: (2U,) genes -> (bits (U,), margin (U,)) int arrays."""
+    combos = np.asarray(decode_combos(jnp.asarray(genes)))
+    return (WB_MIN + combos // N_MARGINS).astype(np.int32), \
+        (combos % N_MARGINS).astype(np.int32)
+
+
+def _gather_weights(table, combos):
+    """table (18, A, U) + combos (U,) -> (A, U) per-unit effective weights."""
+    return jnp.take_along_axis(table, combos[None, None, :], axis=0)[0]
+
+
+def _gather_cost(table, combos):
+    """table (18, U) + combos (U,) -> (U,) per-unit area quanta."""
+    return jnp.take_along_axis(table, combos[None, :], axis=0)[0]
+
+
+def operand_objectives(ops: MLPOperands, genes):
+    """(2*(H+C),) genes -> (acc loss, normalized area), both minimized.
+
+    Exact integer arithmetic in f32 throughout (bounds in the module doc),
+    argmax with first-max ties — bit-identical to the netlist and the
+    kernel route.
+    """
+    n_hidden = ops.cost1.shape[-1]
+    combos = decode_combos(genes)
+    kh, ko = combos[:n_hidden], combos[n_hidden:]
+    w1 = _gather_weights(ops.tw1, kh)
+    w2 = _gather_weights(ops.tw2, ko)
+    h = ops.x8f @ w1
+    hq = jnp.floor(jnp.maximum(h, 0.0) * ops.shift_scale)
+    s = hq @ w2
+    s = jnp.where(ops.class_valid[None, :], s, _NEG_SENTINEL)
+    pred = jnp.argmax(s, axis=1)
+    acc = jnp.sum((pred == ops.y).astype(jnp.float32)) / ops.n_valid
+    units = _gather_cost(ops.cost1, kh).sum() + _gather_cost(ops.cost2, ko).sum()
+    areas = units * area_mod.AREA_QUANTUM_MM2
+    return jnp.stack([ops.exact_accuracy - acc, areas / ops.exact_area_mm2])
+
+
+def population_objectives(ops: MLPOperands, pop):
+    """(P, 2U) -> (P, 2): the ctx-taking fitness for the sweep's vmap."""
+    return jax.vmap(lambda g: operand_objectives(ops, g))(pop)
+
+
+def make_reference_fitness(problem: MLPProblem):
+    ops = problem.operands
+    return jax.jit(lambda pop: population_objectives(ops, pop))
+
+
+def make_kernel_fitness(problem: MLPProblem, *, interpret: bool | None = None,
+                        **_unused):
+    """Fused route: the population's first layer as ONE `qmatmul` launch.
+
+    Per-chromosome effective weights gather from TW1 and concatenate on the
+    output axis — `x8f (B, F) @ w (F, P*H) int8` — so the test set streams
+    through the Pallas int8 matmul once per generation instead of once per
+    chromosome. Everything stays integer-valued in f32, so the result is
+    bit-identical to `make_reference_fitness` (pinned in tests).
+    Extra kwargs (the tree backend's block sizes) are accepted and ignored.
+    """
+    from repro.kernels import ops as kops
+
+    ops = problem.operands
+    n_hidden, n_classes = problem.n_hidden, problem.n_classes
+
+    def fitness(pop):
+        p = pop.shape[0]
+        combos = decode_combos(pop)                  # (P, H + C)
+        kh, ko = combos[:, :n_hidden], combos[:, n_hidden:]
+        w1 = jax.vmap(lambda k: _gather_weights(ops.tw1, k))(kh)  # (P, F, H)
+        w2 = jax.vmap(lambda k: _gather_weights(ops.tw2, k))(ko)  # (P, H, C)
+        wq = jnp.transpose(w1, (1, 0, 2)).reshape(-1, p * n_hidden)
+        h = kops.qmatmul(ops.x8f, wq.astype(jnp.int8),
+                         jnp.ones((p * n_hidden,), jnp.float32),
+                         interpret=interpret)
+        h = h.reshape(-1, p, n_hidden)
+        hq = jnp.floor(jnp.maximum(h, 0.0) * ops.shift_scale)
+        s = jnp.einsum("bph,phc->bpc", hq, w2)
+        s = jnp.where(ops.class_valid[None, None, :], s, _NEG_SENTINEL)
+        pred = jnp.argmax(s, axis=2)                 # (B, P)
+        acc = (jnp.sum((pred == ops.y[:, None]).astype(jnp.float32), axis=0)
+               / ops.n_valid)
+        units = (jax.vmap(lambda k: _gather_cost(ops.cost1, k))(kh).sum(-1)
+                 + jax.vmap(lambda k: _gather_cost(ops.cost2, k))(ko).sum(-1))
+        areas = units * area_mod.AREA_QUANTUM_MM2
+        return jnp.stack([ops.exact_accuracy - acc,
+                          areas / ops.exact_area_mm2], axis=1)
+
+    return jax.jit(fitness)
+
+
+def make_kernel_predict(problem: MLPProblem, *, interpret: bool | None = None):
+    """Single-chromosome (2U,) -> (B,) predictions through the qmatmul route
+    — the kernel leg of the MLP oracle triangle (DESIGN.md §10/§15)."""
+    from repro.kernels import ops as kops
+
+    ops = problem.operands
+    n_hidden = problem.n_hidden
+
+    def predict(genes):
+        combos = decode_combos(genes)
+        kh, ko = combos[:n_hidden], combos[n_hidden:]
+        w1 = _gather_weights(ops.tw1, kh)
+        w2 = _gather_weights(ops.tw2, ko)
+        h = kops.qmatmul(ops.x8f, w1.astype(jnp.int8),
+                         jnp.ones((n_hidden,), jnp.float32),
+                         interpret=interpret)
+        hq = jnp.floor(jnp.maximum(h, 0.0) * ops.shift_scale)
+        s = jnp.where(ops.class_valid[None, :], hq @ w2, _NEG_SENTINEL)
+        return jnp.argmax(s, axis=1).astype(jnp.int32)
+
+    return predict
+
+
+# ---------------------------------------------------------------------------
+# sweep padding (DESIGN.md §11): dims = (H, C, F, B)
+# ---------------------------------------------------------------------------
+
+def problem_dims(problem: MLPProblem) -> tuple[int, int, int, int]:
+    return (problem.n_hidden, problem.n_classes, problem.n_features,
+            int(problem.x8.shape[0]))
+
+
+def pad_problem(problem: MLPProblem,
+                dims: tuple[int, int, int, int]) -> MLPOperands:
+    """Zero-pad the decode tables / dataset to bucket dims (inert padding:
+    padded neurons have all-zero weights AND costs for every combo, so their
+    genes can never move an objective bit)."""
+    hp, cp, fp, bp = dims
+    h, c, f, b = problem_dims(problem)
+    if not (hp >= h and cp >= c and fp >= f and bp >= b):
+        raise ValueError(f"padded dims {dims} smaller than problem dims "
+                         f"{(h, c, f, b)}")
+    ops = problem.operands
+    tw1 = np.zeros((N_COMBOS, fp, hp), np.float32)
+    tw1[:, :f, :h] = np.asarray(ops.tw1)
+    tw2 = np.zeros((N_COMBOS, hp, cp), np.float32)
+    tw2[:, :h, :c] = np.asarray(ops.tw2)
+    cost1 = np.zeros((N_COMBOS, hp), np.float32)
+    cost1[:, :h] = np.asarray(ops.cost1)
+    cost2 = np.zeros((N_COMBOS, cp), np.float32)
+    cost2[:, :c] = np.asarray(ops.cost2)
+    x8f = np.zeros((bp, fp), np.float32)
+    x8f[:b, :f] = np.asarray(ops.x8f)
+    y = np.full(bp, -1, np.int32)
+    y[:b] = problem.y
+    class_valid = np.zeros(cp, bool)
+    class_valid[:c] = True
+    return MLPOperands(
+        tw1=jnp.asarray(tw1), tw2=jnp.asarray(tw2),
+        cost1=jnp.asarray(cost1), cost2=jnp.asarray(cost2),
+        x8f=jnp.asarray(x8f), y=jnp.asarray(y),
+        class_valid=jnp.asarray(class_valid),
+        n_valid=jnp.float32(b),
+        shift_scale=ops.shift_scale,
+        exact_accuracy=ops.exact_accuracy,
+        exact_area_mm2=ops.exact_area_mm2,
+    )
+
+
+# ---------------------------------------------------------------------------
+# artifact schema (family-tagged pareto.json) + loader
+# ---------------------------------------------------------------------------
+
+MLP_REQUIRED_TOP_KEYS = frozenset({
+    "family", "backend", "wall_s", "n_evaluations", "n_dispatches",
+    "n_features", "n_hidden", "n_classes", "w1_master", "w2_master", "shift",
+    "exact_accuracy", "exact_area_mm2", "rtl_verified", "pareto",
+})
+MLP_OPTIONAL_TOP_KEYS = frozenset({"dataset"})
+MLP_REQUIRED_POINT_KEYS = frozenset({
+    "acc_loss", "norm_area", "area_mm2", "area_netlist_mm2",
+    "netlist_gates", "bits", "margin", "genes",
+})
+MLP_OPTIONAL_POINT_KEYS = frozenset({"rtl", "verified"})
+
+
+def validate_payload(payload: dict, where: str = "payload") -> dict:
+    """Two-way key-set + layout validation, mirroring `search.artifact`."""
+    from repro.search.artifact import _check_keys
+
+    if not isinstance(payload, dict):
+        raise ValueError(f"pareto artifact {where}: expected a JSON object, "
+                         f"got {type(payload).__name__}")
+    _check_keys(payload, MLP_REQUIRED_TOP_KEYS, MLP_OPTIONAL_TOP_KEYS, where)
+    if payload["family"] != "mlp":
+        raise ValueError(f"pareto artifact {where}: family "
+                         f"{payload['family']!r} is not 'mlp'")
+    f, h, c = (payload["n_features"], payload["n_hidden"],
+               payload["n_classes"])
+    if len(payload["w1_master"]) != f or any(len(r) != h
+                                             for r in payload["w1_master"]):
+        raise ValueError(f"pareto artifact {where}: 'w1_master' must be "
+                         f"{f} rows x {h} columns")
+    if len(payload["w2_master"]) != h or any(len(r) != c
+                                             for r in payload["w2_master"]):
+        raise ValueError(f"pareto artifact {where}: 'w2_master' must be "
+                         f"{h} rows x {c} columns")
+    points = payload["pareto"]
+    if not isinstance(points, list):
+        raise ValueError(f"pareto artifact {where}: 'pareto' must be a list")
+    for i, point in enumerate(points):
+        if not isinstance(point, dict):
+            raise ValueError(
+                f"pareto artifact {where}: pareto[{i}] must be an object")
+        _check_keys(point, MLP_REQUIRED_POINT_KEYS, MLP_OPTIONAL_POINT_KEYS,
+                    f"{where}.pareto[{i}]")
+        for key in ("bits", "margin"):
+            if len(point[key]) != h + c:
+                raise ValueError(
+                    f"pareto artifact {where}: pareto[{i}].{key} has "
+                    f"{len(point[key])} entries, expected {h + c} neurons")
+    return payload
+
+
+@dataclasses.dataclass
+class MlpParetoArtifact:
+    """A loaded, validated MLP `pareto.json`: master codes + pareto points.
+
+    `point_design(i)` re-materializes point `i`'s EFFECTIVE integer weights
+    from the masters + the point's per-neuron (bits, margin) through the
+    same fixpoint snap tables the search decoded with — serving an artifact
+    point reproduces its recorded accuracy bit-exactly."""
+
+    payload: dict
+    w1_master: np.ndarray       # (F, H) int32
+    w2_master: np.ndarray       # (H, C) int32
+    shift: int
+    n_features: int
+    n_hidden: int
+    n_classes: int
+    exact_accuracy: float
+    exact_area_mm2: float
+    dataset: str | None
+    points: list
+    family: str = "mlp"
+
+    def point_design(self, i: int) -> tuple[np.ndarray, np.ndarray]:
+        """(w1_eff (F, H), w2_eff (H, C)) int32 effective weights of point i."""
+        point = self.points[i]
+        bits = np.asarray(point["bits"], np.int64)
+        margin = np.asarray(point["margin"], np.int64)
+        h = self.n_hidden
+        w1 = effective_weights(self.w1_master, bits[:h], margin[:h])
+        w2 = effective_weights(self.w2_master, bits[h:], margin[h:])
+        return w1, w2
+
+    def point_accuracy(self, i: int) -> float:
+        return self.exact_accuracy - float(self.points[i]["acc_loss"])
+
+    def best_under_loss(self, max_loss: float = 0.01) -> int | None:
+        ok = [i for i, p in enumerate(self.points)
+              if p["acc_loss"] <= max_loss + 1e-9]
+        if not ok:
+            return None
+        return min(ok, key=lambda i: self.points[i]["norm_area"])
+
+
+def artifact_from_payload(payload: dict,
+                          where: str = "payload") -> MlpParetoArtifact:
+    validate_payload(payload, where)
+    return MlpParetoArtifact(
+        payload=payload,
+        w1_master=np.asarray(payload["w1_master"], np.int32),
+        w2_master=np.asarray(payload["w2_master"], np.int32),
+        shift=int(payload["shift"]),
+        n_features=int(payload["n_features"]),
+        n_hidden=int(payload["n_hidden"]),
+        n_classes=int(payload["n_classes"]),
+        exact_accuracy=float(payload["exact_accuracy"]),
+        exact_area_mm2=float(payload["exact_area_mm2"]),
+        dataset=payload.get("dataset"),
+        points=list(payload["pareto"]),
+    )
+
+
+def write_artifact(problem: MLPProblem, result, out_dir: str, *,
+                   emit_rtl: bool = False, verify_rtl: bool = False,
+                   dataset: str | None = None) -> str:
+    """MLP `pareto.json`: masters + decoded designs + hardware artifact.
+
+    Per point: decoded per-neuron (bits, margin), the synthesized-netlist
+    area/gate inventory, optional Verilog (`emit_rtl` — the generic
+    gate-dump of `core.rtl.emit_circuit_verilog`), and the oracle-triangle
+    assertion under `verify_rtl` (netlist sim == integer tensor predict ==
+    qmatmul kernel route, over the full test set)."""
+    from repro.core import rtl
+
+    os.makedirs(out_dir, exist_ok=True)
+    if emit_rtl:
+        os.makedirs(os.path.join(out_dir, "rtl"), exist_ok=True)
+    kernel_predict = make_kernel_predict(problem) if verify_rtl else None
+
+    points = []
+    for i, (o, g) in enumerate(zip(result.pareto_objs, result.pareto_genes)):
+        bits, margin = decode_design(g)
+        h = problem.n_hidden
+        w1 = effective_weights(problem.w1_master, bits[:h], margin[:h])
+        w2 = effective_weights(problem.w2_master, bits[h:], margin[h:])
+        circuit = netlist.build_mlp_circuit(w1, w2, problem.shift,
+                                            problem.n_classes)
+        point = {
+            "acc_loss": float(o[0]),
+            "norm_area": float(o[1]),
+            "area_mm2": float(o[1] * problem.exact_area_mm2),
+            "area_netlist_mm2": round(netlist.netlist_area_mm2(circuit), 4),
+            "netlist_gates": netlist.gate_counts(circuit),
+            "bits": bits.tolist(),
+            "margin": margin.tolist(),
+            "genes": np.asarray(g, np.float64).round(6).tolist(),
+        }
+        if emit_rtl:
+            verilog = rtl.emit_circuit_verilog(circuit,
+                                               module_name="printed_mlp")
+            rel = os.path.join("rtl", f"point_{i:02d}.v")
+            with open(os.path.join(out_dir, rel), "w") as fh:
+                fh.write(verilog)
+            point["rtl"] = rel
+        if verify_rtl:
+            sim = np.asarray(netlist.simulate(circuit, problem.x8))
+            ref = predict_master(w1, w2, problem.shift, problem.x8)
+            ker = np.asarray(kernel_predict(jnp.asarray(g)))
+            if not (np.array_equal(sim, ref) and np.array_equal(sim, ker)):
+                n_ref = int((sim != ref).sum())
+                n_ker = int((sim != ker).sum())
+                raise AssertionError(
+                    f"mlp pareto point {i}: netlist simulation diverges from "
+                    f"the tensor predict on {n_ref} and from the kernel "
+                    f"route on {n_ker} of {sim.shape[0]} test samples")
+            point["verified"] = True
+        points.append(point)
+
+    payload = {
+        "family": "mlp",
+        "backend": result.backend,
+        "wall_s": round(result.wall_s, 3),
+        "n_evaluations": result.n_evaluations,
+        "n_dispatches": result.n_dispatches,
+        "n_features": problem.n_features,
+        "n_hidden": problem.n_hidden,
+        "n_classes": problem.n_classes,
+        "w1_master": problem.w1_master.tolist(),
+        "w2_master": problem.w2_master.tolist(),
+        "shift": int(problem.shift),
+        "exact_accuracy": problem.exact_accuracy,
+        "exact_area_mm2": problem.exact_area_mm2,
+        "rtl_verified": bool(verify_rtl),
+        "pareto": points,
+    }
+    if dataset is not None:
+        payload["dataset"] = dataset
+    validate_payload(payload, where="mlp write_artifact")
+    path = os.path.join(out_dir, "pareto.json")
+    tmp = path + ".tmp"
+    with open(tmp, "w") as fh:
+        json.dump(payload, fh, indent=1)
+    os.replace(tmp, path)
+    return path
+
+
+# ---------------------------------------------------------------------------
+# the family object
+# ---------------------------------------------------------------------------
+
+class PrintedMlpFamily(ClassifierFamily):
+    """Integer-weight printed MLPs (arxiv 2402.02930 / 2312.17612 style)."""
+
+    name = "mlp"
+
+    def owns(self, problem) -> bool:
+        return isinstance(problem, MLPProblem)
+
+    def build_problem(self, dataset: str, n_hidden: int = DEFAULT_HIDDEN,
+                      **opts):
+        return build_problem(dataset, n_hidden=n_hidden, **opts)
+
+    def n_genes(self, problem) -> int:
+        return problem.n_genes
+
+    def exact_genes(self, problem):
+        return problem.exact_genes()
+
+    def describe(self, problem) -> str:
+        return (f"mlp: features={problem.n_features} "
+                f"hidden={problem.n_hidden} classes={problem.n_classes} "
+                f"shift={problem.shift} "
+                f"exact_acc={problem.exact_accuracy:.3f}")
+
+    def make_fitness(self, problem, backend: str = "reference", **kw):
+        if backend == "reference":
+            return make_reference_fitness(problem)
+        if backend == "kernel":
+            return make_kernel_fitness(problem, **kw)
+        raise ValueError(f"unknown fitness backend {backend!r} for the "
+                         f"mlp family")
+
+    def problem_dims(self, problem) -> tuple:
+        return problem_dims(problem)
+
+    def pad_problem(self, problem, dims: tuple):
+        return pad_problem(problem, dims)
+
+    def population_objectives(self, padded, pop):
+        return population_objectives(padded, pop)
+
+    def padded_n_genes(self, dims: tuple) -> int:
+        return 2 * (dims[0] + dims[1])
+
+    def padded_exact_genes(self, dims: tuple):
+        return exact_genes(dims[0] + dims[1])
+
+    def unpad_genes(self, problem, genes, dims: tuple):
+        hp = dims[0]
+        idx = np.r_[0:2 * problem.n_hidden,
+                    2 * hp:2 * hp + 2 * problem.n_classes]
+        return genes[:, idx]
+
+    def eval_cost(self, dims: tuple) -> float:
+        hp, cp, fp, bp = dims
+        return float(bp) * (fp * hp + hp * cp)
+
+    def write_artifact(self, problem, result, out_dir: str, *,
+                       emit_rtl: bool = False, verify_rtl: bool = False,
+                       dataset: str | None = None) -> str:
+        return write_artifact(problem, result, out_dir, emit_rtl=emit_rtl,
+                              verify_rtl=verify_rtl, dataset=dataset)
+
+    def load_artifact(self, payload_or_path):
+        if isinstance(payload_or_path, str):
+            with open(payload_or_path) as fh:
+                payload = json.load(fh)
+            return artifact_from_payload(payload, where=payload_or_path)
+        return artifact_from_payload(payload_or_path)
+
+    def make_server(self, artifact, point="best", max_loss: float = 0.01,
+                    **opts):
+        from repro.runtime.classify import ClassifyServer
+        return ClassifyServer.from_artifact(artifact, point=point,
+                                            max_loss=max_loss, **opts)
+
+    def build_point_circuit(self, artifact, idx: int):
+        w1, w2 = artifact.point_design(idx)
+        return netlist.build_mlp_circuit(w1, w2, artifact.shift,
+                                         artifact.n_classes)
+
+
+FAMILY = PrintedMlpFamily()

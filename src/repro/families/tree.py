@@ -1,0 +1,128 @@
+"""The decision-tree/forest family: `SearchProblem` behind the protocol.
+
+This is the source paper's family (bespoke comparators, super-tree path
+matmul, leaf-vote argmax) wrapped in the `ClassifierFamily` interface
+(DESIGN.md §15) with ZERO behavioral change: every method delegates to the
+pre-refactor modules (`search.problem`, `search.backends`, `search.engine`,
+`search.sweep`, `runtime.classify`), so the tree path stays pinned bit-exact
+array-for-array — `tests/test_search.py` / `test_sweep.py` /
+`test_serve_classifier.py` pass unmodified on top of this wrapper.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import quant
+from repro.families.base import ClassifierFamily
+from repro.search.problem import SearchProblem
+
+
+class TreeFamily(ClassifierFamily):
+    """Bespoke decision trees and bootstrap forests (paper arxiv 2203.08011)."""
+
+    name = "tree"
+
+    # -- problem construction + genes -------------------------------------
+
+    def owns(self, problem) -> bool:
+        return isinstance(problem, SearchProblem)
+
+    def build_problem(self, dataset: str, n_trees: int = 1, **opts):
+        from repro.core.forest import train_forest
+        from repro.core.train import train_tree
+        from repro.core.tree import to_parallel
+        from repro.datasets import load_dataset
+        from repro.search.problem import (build_forest_problem,
+                                          build_tree_problem)
+
+        ds = load_dataset(dataset)
+        if n_trees <= 1:
+            tree = train_tree(ds.x_train, ds.y_train, ds.n_classes)
+            return build_tree_problem(to_parallel(tree), ds.x_test, ds.y_test)
+        forest = train_forest(ds.x_train, ds.y_train, ds.n_classes,
+                              n_trees=n_trees)
+        return build_forest_problem(forest, ds.x_test, ds.y_test)
+
+    def n_genes(self, problem) -> int:
+        return problem.n_genes
+
+    def exact_genes(self, problem):
+        return problem.exact_genes()
+
+    def describe(self, problem) -> str:
+        kind = ("tree" if problem.n_trees == 1
+                else f"forest[{problem.n_trees}]")
+        return (f"{kind}: comparators={problem.n_comparators} "
+                f"leaves={problem.n_leaves} "
+                f"exact_acc={problem.exact_accuracy:.3f}")
+
+    # -- fitness -----------------------------------------------------------
+
+    def make_fitness(self, problem, backend: str = "reference", **kw):
+        from repro.search import backends as _backends
+
+        if backend == "reference":
+            return _backends.make_reference_fitness(problem)
+        if backend == "kernel":
+            return _backends.make_kernel_fitness(problem, **kw)
+        raise ValueError(f"unknown fitness backend {backend!r} for the "
+                         f"tree family")
+
+    # -- sweep padding (DESIGN.md §11) -------------------------------------
+
+    def problem_dims(self, problem) -> tuple:
+        from repro.search import sweep as _sweep
+        return _sweep.problem_dims(problem)
+
+    def pad_problem(self, problem, dims: tuple):
+        from repro.search import sweep as _sweep
+        return _sweep.pad_problem(problem, dims)
+
+    def population_objectives(self, padded, pop):
+        from repro.search import sweep as _sweep
+        return _sweep.population_objectives(padded, pop)
+
+    def padded_n_genes(self, dims: tuple) -> int:
+        return 2 * dims[0]
+
+    def padded_exact_genes(self, dims: tuple):
+        return quant.exact_genes(dims[0])
+
+    def unpad_genes(self, problem, genes, dims: tuple):
+        return genes[:, :problem.n_genes]
+
+    def eval_cost(self, dims: tuple) -> float:
+        np_, lp, cp, fp, bp = dims
+        return float(bp) * (np_ + np_ * lp + lp * cp)
+
+    # -- artifacts + serving (DESIGN.md §10/§14) ---------------------------
+
+    def write_artifact(self, problem, result, out_dir: str, *,
+                       emit_rtl: bool = False, verify_rtl: bool = False,
+                       dataset: str | None = None) -> str:
+        from repro.search import engine as _engine
+        return _engine.write_pareto_artifact(
+            problem, result, out_dir, emit_rtl=emit_rtl,
+            verify_rtl=verify_rtl, dataset=dataset)
+
+    def load_artifact(self, payload_or_path):
+        from repro.search import artifact as _artifact
+
+        if isinstance(payload_or_path, str):
+            return _artifact.load_pareto_artifact(payload_or_path)
+        return _artifact.from_payload(payload_or_path)
+
+    def make_server(self, artifact, point="best", max_loss: float = 0.01,
+                    **opts):
+        from repro.runtime.classify import ClassifyServer
+        return ClassifyServer.from_artifact(artifact, point=point,
+                                            max_loss=max_loss, **opts)
+
+    def build_point_circuit(self, artifact, idx: int):
+        from repro.core import netlist
+        bits, t_int = artifact.point_design(idx)
+        return netlist.build_circuit(artifact.ptrees(), bits, t_int,
+                                     artifact.n_classes)
+
+
+FAMILY = TreeFamily()

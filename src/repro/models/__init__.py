@@ -1,3 +1,3 @@
-from repro.models import attention, common, lm, mlp, moe, ssm, transformer
+from repro.models import attention, common, lm, lm_mlp, moe, ssm, transformer
 
-__all__ = ["attention", "common", "lm", "mlp", "moe", "ssm", "transformer"]
+__all__ = ["attention", "common", "lm", "lm_mlp", "moe", "ssm", "transformer"]

@@ -1,0 +1,39 @@
+"""Dense LM MLP blocks: SwiGLU / GeGLU / GELU / squared-ReLU.
+
+Named `lm_mlp` to keep the transformer feed-forward stack clearly apart
+from the printed-classifier MLP family (`repro.families.printed_mlp`,
+DESIGN.md §15) — two unrelated things that both used to answer to "mlp".
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import activation, is_glu, normal_init
+from repro.sharding.rules import maybe_shard
+
+
+def init_mlp(key, cfg, dtype):
+    d, ff = cfg.d_model, cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "wi": normal_init(k1, (d, ff), d ** -0.5, dtype),
+        "wo": normal_init(k2, (ff, d), ff ** -0.5, dtype),
+    }
+    if is_glu(cfg.act):
+        p["wg"] = normal_init(k3, (d, ff), d ** -0.5, dtype)
+    return p
+
+
+def mlp_block(params, cfg, x, rules=None):
+    act = activation(cfg.act)
+    batch_ax = rules.batch if rules else None
+    ff_ax = rules.model if rules else None
+    h = jnp.einsum("bsd,df->bsf", x, params["wi"])
+    if is_glu(cfg.act):
+        g = jnp.einsum("bsd,df->bsf", x, params["wg"])
+        h = act(g) * h
+    else:
+        h = act(h)
+    h = maybe_shard(h, (batch_ax, None, ff_ax), rules)
+    return jnp.einsum("bsf,fd->bsd", h, params["wo"])

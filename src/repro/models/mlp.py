@@ -1,34 +1,18 @@
-"""Dense MLP blocks: SwiGLU / GeGLU / GELU / squared-ReLU."""
+"""Deprecated alias for `repro.models.lm_mlp` (the transformer feed-forward
+blocks). The module was renamed so "mlp" no longer collides with the printed
+classifier MLP family (`repro.families.printed_mlp`, DESIGN.md §15)."""
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
+import warnings
 
-from repro.models.common import activation, is_glu, normal_init
-from repro.sharding.rules import maybe_shard
+from repro.models.lm_mlp import init_mlp, mlp_block  # noqa: F401
 
+warnings.warn(
+    "repro.models.mlp is deprecated: use repro.models.lm_mlp for the "
+    "transformer feed-forward blocks (the printed classifier MLP family "
+    "lives in repro.families.printed_mlp)",
+    DeprecationWarning,
+    stacklevel=2,
+)
 
-def init_mlp(key, cfg, dtype):
-    d, ff = cfg.d_model, cfg.d_ff
-    k1, k2, k3 = jax.random.split(key, 3)
-    p = {
-        "wi": normal_init(k1, (d, ff), d ** -0.5, dtype),
-        "wo": normal_init(k2, (ff, d), ff ** -0.5, dtype),
-    }
-    if is_glu(cfg.act):
-        p["wg"] = normal_init(k3, (d, ff), d ** -0.5, dtype)
-    return p
-
-
-def mlp_block(params, cfg, x, rules=None):
-    act = activation(cfg.act)
-    batch_ax = rules.batch if rules else None
-    ff_ax = rules.model if rules else None
-    h = jnp.einsum("bsd,df->bsf", x, params["wi"])
-    if is_glu(cfg.act):
-        g = jnp.einsum("bsd,df->bsf", x, params["wg"])
-        h = act(g) * h
-    else:
-        h = act(h)
-    h = maybe_shard(h, (batch_ax, None, ff_ax), rules)
-    return jnp.einsum("bsf,fd->bsd", h, params["wo"])
+__all__ = ["init_mlp", "mlp_block"]

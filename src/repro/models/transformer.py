@@ -22,7 +22,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.models import attention, mlp, moe, ssm
+from repro.models import attention, lm_mlp, moe, ssm
 from repro.models.common import apply_norm, init_norm, normal_init
 from repro.sharding.rules import head_sharding, maybe_shard
 
@@ -46,7 +46,7 @@ def _init_attn_mlp(key, cfg, dtype, use_moe: bool):
         "attn": attention.init_attention(k1, cfg, dtype),
         "ln2": init_norm(cfg, dtype),
         "ffn": moe.init_moe(k2, cfg, dtype) if use_moe
-        else mlp.init_mlp(k3, cfg, dtype),
+        else lm_mlp.init_mlp(k3, cfg, dtype),
     }
 
 
@@ -95,7 +95,7 @@ def _attn_mlp_block(p, cfg, x, positions, *, rules, mode, kv_repeat,
     if use_moe:
         ff, aux = moe.moe_block(p["ffn"], cfg, z, rules)
     else:
-        ff, aux = mlp.mlp_block(p["ffn"], cfg, z, rules), jnp.float32(0.0)
+        ff, aux = lm_mlp.mlp_block(p["ffn"], cfg, z, rules), jnp.float32(0.0)
     return x + ff, new_kv, aux
 
 

@@ -30,7 +30,17 @@ from repro.core import quant as core_quant
 
 @functools.lru_cache(maxsize=64)
 def snap_lut(bits: int, margin: int) -> np.ndarray:
-    """code (two's complement int in [-2^(b-1), 2^(b-1)-1]) -> snapped code."""
+    """code (two's complement int in [-2^(b-1), 2^(b-1)-1]) -> snapped code.
+
+    The single-step snap is iterated to a FIXPOINT at build time: one pass
+    can land on a code that itself snaps cheaper (e.g. bits=8, m=2:
+    19 -> 18 (popcount 2) -> 16 (popcount 1)), which would make snapping
+    non-idempotent — re-snapping already-snapped weights (as the printed-MLP
+    family's decode does through its precision ladder) would then drift.
+    Iteration terminates because popcount(|snap(c)|) <= popcount(|c|) with
+    ties broken by smaller |step|=0, so each chase strictly reduces the
+    (popcount, |c|) key; margin=0 stays the identity and codes never leave
+    [lo, hi] (property-tested in tests/test_quantize.py)."""
     lo, hi = -(1 << (bits - 1)), (1 << (bits - 1)) - 1
     out = np.zeros(1 << bits, dtype=np.int32)
     for code in range(lo, hi + 1):
@@ -43,6 +53,15 @@ def snap_lut(bits: int, margin: int) -> np.ndarray:
             if key < best_key:
                 best, best_key = c, key
         out[code - lo] = best
+    # chase each snap chain to its fixpoint so snap(snap(c)) == snap(c);
+    # the chain length is bounded by the strictly-decreasing key, but cap
+    # the walk at the table size anyway
+    for idx in range(out.shape[0]):
+        for _ in range(out.shape[0]):
+            nxt = int(out[int(out[idx]) - lo])
+            if nxt == int(out[idx]):
+                break
+            out[idx] = nxt
     return out  # index by (code - lo)
 
 

@@ -157,6 +157,7 @@ class ClassifyServer:
                                  self.n_classes),
         )
 
+        self.family = "tree"
         self._steps: dict[int, object] = {}      # bucket -> jitted step
         self._slots: dict[int, list] = {}        # bucket -> [state, state]
         self._slot_idx: dict[int, int] = {}
@@ -164,14 +165,74 @@ class ClassifyServer:
     # -- construction ------------------------------------------------------
 
     @classmethod
+    def for_mlp(cls, w1, w2, shift: int, n_classes: int,
+                n_features: int | None = None, *, backend: str = "kernel",
+                max_batch: int = 1024, granule: int = GRANULE,
+                interpret: bool | None = None,
+                donate: bool | None = None) -> "ClassifyServer":
+        """Serve a printed-MLP design (effective integer weights).
+
+        Same bucketed ping-pong machinery as the tree server — only `_infer`
+        differs: `kernel` routes the first layer through `kernels.qmatmul`
+        (int8 weights), `reference` is the pure-jnp matmul; both are
+        integer-exact in f32 and pinned to `core.netlist.build_mlp_circuit`.
+        """
+        if backend not in BACKENDS:
+            raise ValueError(
+                f"unknown serving backend {backend!r}; options: {BACKENDS}")
+        if max_batch < granule:
+            raise ValueError(f"max_batch={max_batch} < granule={granule}")
+        w1 = np.asarray(w1, np.int32)
+        w2 = np.asarray(w2, np.int32)
+        if w1.ndim != 2 or w2.ndim != 2 or w2.shape[0] != w1.shape[1]:
+            raise ValueError(
+                f"weight shapes w1{w1.shape}/w2{w2.shape} do not chain "
+                f"(expected (F, H) @ (H, C))")
+        if w2.shape[1] != n_classes:
+            raise ValueError(
+                f"w2 has {w2.shape[1]} output columns for "
+                f"n_classes={n_classes}")
+        self = cls.__new__(cls)
+        self.family = "mlp"
+        self.w1 = w1
+        self.w2 = w2
+        self.shift = int(shift)
+        self.n_classes = int(n_classes)
+        self.n_features = (int(n_features) if n_features is not None
+                           else int(w1.shape[0]))
+        if self.n_features != w1.shape[0]:
+            raise ValueError(
+                f"n_features={self.n_features} but w1 reads {w1.shape[0]} "
+                f"features")
+        self.backend = backend
+        self.max_batch = int(max_batch)
+        self.granule = int(granule)
+        self.interpret = interpret
+        self.donate = _auto_donate() if donate is None else bool(donate)
+        self.stats = ServeStats()
+        self._mlp = dict(
+            w1_i8=jnp.asarray(w1, jnp.int8),
+            w1_f=jnp.asarray(w1, jnp.float32),
+            w2_f=jnp.asarray(w2, jnp.float32),
+            ones=jnp.ones((w1.shape[1],), jnp.float32),
+            shift_scale=jnp.float32(2.0 ** -self.shift),
+        )
+        self._steps = {}
+        self._slots = {}
+        self._slot_idx = {}
+        return self
+
+    @classmethod
     def from_artifact(cls, artifact, point: int | str = "best",
                       max_loss: float = 0.01, **opts) -> "ClassifyServer":
         """Serve a `pareto.json` point.
 
-        ``artifact`` is a `search.ParetoArtifact` or a path to pareto.json;
-        ``point`` selects the pareto index, or "best" for the smallest-area
-        point within ``max_loss``. The design re-materializes from the
-        artifact alone (layout + decoded bits/t_int — DESIGN.md §14).
+        ``artifact`` is a loaded artifact of ANY family (tree
+        `search.ParetoArtifact` or MLP `families.printed_mlp.
+        MlpParetoArtifact`) or a path to pareto.json; ``point`` selects the
+        pareto index, or "best" for the smallest-area point within
+        ``max_loss``. The design re-materializes from the artifact alone
+        (DESIGN.md §14/§15).
         """
         from repro.search import artifact as _artifact
 
@@ -189,9 +250,14 @@ class ClassifyServer:
                 raise ValueError(
                     f"pareto point {idx} out of range "
                     f"(artifact has {len(artifact.points)} points)")
-        bits, t_int = artifact.point_design(idx)
-        server = cls(artifact.ptrees(), bits, t_int, artifact.n_classes,
-                     **opts)
+        if getattr(artifact, "family", "tree") == "mlp":
+            w1, w2 = artifact.point_design(idx)
+            server = cls.for_mlp(w1, w2, artifact.shift, artifact.n_classes,
+                                 artifact.n_features, **opts)
+        else:
+            bits, t_int = artifact.point_design(idx)
+            server = cls(artifact.ptrees(), bits, t_int, artifact.n_classes,
+                         **opts)
         server.artifact = artifact
         server.point_index = idx
         return server
@@ -290,6 +356,16 @@ class ClassifyServer:
 
     def _infer(self, x8):
         """(bucket, F) codes -> (bucket,) predictions, selected backend."""
+        if self.family == "mlp":
+            m = self._mlp
+            xf = x8[:, :self.n_features].astype(jnp.float32)
+            if self.backend == "kernel":
+                h = kops.qmatmul(xf, m["w1_i8"], m["ones"],
+                                 interpret=self.interpret)
+            else:
+                h = xf @ m["w1_f"]
+            hq = jnp.floor(jnp.maximum(h, 0.0) * m["shift_scale"])
+            return jnp.argmax(hq @ m["w2_f"], axis=1).astype(jnp.int32)
         if self.backend == "kernel":
             bucket = x8.shape[0]
             return kops.classify(

@@ -39,9 +39,6 @@ import argparse
 import numpy as np
 
 from repro.core import area
-from repro.core.forest import train_forest
-from repro.core.train import train_tree
-from repro.core.tree import to_parallel
 from repro.datasets import DATASET_SPECS, load_dataset
 from repro import search
 
@@ -57,6 +54,12 @@ def sweep_main(argv=None) -> None:
     ap.add_argument("--trees", type=int, default=1,
                     help="1 = single bespoke DT per dataset; K>1 = bootstrap "
                          "forest per dataset (joint chromosome)")
+    ap.add_argument("--mlp-datasets", default="",
+                    help="comma-separated datasets to ALSO search as printed "
+                         "MLPs (campaign keys suffixed _mlp); the bucket "
+                         "planner keeps families in separate buckets")
+    ap.add_argument("--hidden", type=int, default=16,
+                    help="printed-MLP hidden-layer width for --mlp-datasets")
     ap.add_argument("--pop", type=int, default=64)
     ap.add_argument("--gens", type=int, default=40)
     ap.add_argument("--seed", type=int, default=0)
@@ -92,7 +95,8 @@ def sweep_main(argv=None) -> None:
 
     names = (sorted(DATASET_SPECS) if args.datasets == "all"
              else [n.strip() for n in args.datasets.split(",") if n.strip()])
-    unknown = [n for n in names if n not in DATASET_SPECS]
+    mlp_names = [n.strip() for n in args.mlp_datasets.split(",") if n.strip()]
+    unknown = [n for n in names + mlp_names if n not in DATASET_SPECS]
     if unknown:
         ap.error(f"unknown datasets: {unknown}; options: "
                  f"{sorted(DATASET_SPECS)}")
@@ -101,10 +105,13 @@ def sweep_main(argv=None) -> None:
         compile_cache.enable(args.compilation_cache)
 
     kind = "tree" if args.trees <= 1 else f"forest[{args.trees}]"
-    print(f"== sweep: {len(names)} datasets, {kind} per dataset, "
+    extra = (f" + {len(mlp_names)} printed-MLP datasets" if mlp_names else "")
+    print(f"== sweep: {len(names)} datasets, {kind} per dataset{extra}, "
           f"pop={args.pop} gens={args.gens} ==")
     problems = sweep_mod.build_problems(names, n_trees=args.trees,
-                                        verbose=True)
+                                        verbose=True,
+                                        mlp_datasets=mlp_names,
+                                        n_hidden=args.hidden)
 
     cfg = sweep_mod.SweepConfig(
         pop_size=args.pop, n_generations=args.gens, seed=args.seed,
@@ -115,8 +122,12 @@ def sweep_main(argv=None) -> None:
 
     for i, run in enumerate(sweep.bucket_runs):
         d = run.bucket.dims
-        print(f"bucket {i}: {', '.join(run.bucket.names)} -> padded "
-              f"(N={d[0]}, L={d[1]}, C={d[2]}, F={d[3]}, B={d[4]}), "
+        if run.bucket.family == "tree":
+            dims_s = f"(N={d[0]}, L={d[1]}, C={d[2]}, F={d[3]}, B={d[4]})"
+        else:
+            dims_s = f"(H={d[0]}, C={d[1]}, F={d[2]}, B={d[3]})"
+        print(f"bucket {i}: [{run.bucket.family}] "
+              f"{', '.join(run.bucket.names)} -> padded {dims_s}, "
               f"{run.n_dispatches} dispatches, {run.wall_s:.1f}s")
     print(f"campaign: {sweep.n_dispatches} dispatches over "
           f"{len(sweep.bucket_runs)} buckets (serial per-dataset baseline: "
@@ -138,13 +149,16 @@ def sweep_main(argv=None) -> None:
               f"pareto={len(result.pareto_objs)} pts; {line}")
     if args.verify_rtl:
         n_pts = sum(len(r.pareto_objs) for r in sweep.results.values())
-        print(f"RTL verified: {n_pts} pareto points across {len(names)} "
-              f"datasets (netlist sim == predict_votes == kernel backend)")
+        print(f"RTL verified: {n_pts} pareto points across {len(problems)} "
+              f"problems (netlist sim == tensor predict == kernel route)")
 
     if args.report:
         meta = {"datasets": args.datasets, "trees": args.trees,
                 "pop": args.pop, "gens": args.gens, "seed": args.seed,
                 "mode": "serial" if args.serial else "vmapped"}
+        if mlp_names:
+            meta["mlp_datasets"] = args.mlp_datasets
+            meta["hidden"] = args.hidden
         json_path, md_path = sweep_mod.write_sweep_report(
             sweep, problems, args.out, meta=meta, max_loss=args.max_loss)
         print(f"report: {json_path} + {md_path}")
@@ -207,9 +221,15 @@ def serve_main(argv=None) -> None:
         backend=args.backend, max_batch=args.max_batch)
     idx = server.point_index
     pt = artifact.points[idx]
-    print(f"== serving {args.pareto} point {idx}: "
-          f"{artifact.n_trees} tree(s), {artifact.n_comparators} "
-          f"comparators, acc_loss={pt['acc_loss']:+.4f} "
+    family = getattr(artifact, "family", "tree")
+    if family == "mlp":
+        design = (f"printed MLP {artifact.n_features}-"
+                  f"{artifact.n_hidden}-{artifact.n_classes}")
+    else:
+        design = (f"{artifact.n_trees} tree(s), "
+                  f"{artifact.n_comparators} comparators")
+    print(f"== serving {args.pareto} point {idx}: {design}, "
+          f"acc_loss={pt['acc_loss']:+.4f} "
           f"norm_area={pt['norm_area']:.3f} backend={args.backend} ==")
 
     dataset = args.dataset or artifact.dataset
@@ -222,9 +242,8 @@ def serve_main(argv=None) -> None:
 
     circuit = None
     if args.verify_netlist:
-        bits, t_int = artifact.point_design(idx)
-        circuit = netlist.build_circuit(artifact.ptrees(), bits, t_int,
-                                        artifact.n_classes)
+        from repro.families import get_family
+        circuit = get_family(family).build_point_circuit(artifact, idx)
 
     n = codes.shape[0]
     preds = np.zeros(n, np.int64)
@@ -278,9 +297,16 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser(prog="python -m repro.search")
     ap.add_argument("--dataset", default="seeds",
                     choices=sorted(DATASET_SPECS))
+    ap.add_argument("--family", default="tree", choices=("tree", "mlp"),
+                    help="classifier family to search (DESIGN.md §15): "
+                         "bespoke decision trees/forests, or integer-weight "
+                         "printed MLPs")
     ap.add_argument("--trees", type=int, default=1,
-                    help="1 = single bespoke DT; K>1 = bootstrap forest with "
-                         "a joint 2*sum(N_k)-gene chromosome")
+                    help="tree family: 1 = single bespoke DT; K>1 = "
+                         "bootstrap forest with a joint 2*sum(N_k)-gene "
+                         "chromosome")
+    ap.add_argument("--hidden", type=int, default=16,
+                    help="mlp family: hidden-layer width")
     ap.add_argument("--backend", default="reference",
                     choices=list(search.BACKENDS))
     ap.add_argument("--mesh", default=None,
@@ -323,20 +349,17 @@ def main(argv=None) -> None:
         from repro.runtime import compile_cache
         compile_cache.enable(args.compilation_cache)
 
-    ds = load_dataset(args.dataset)
-    if args.trees <= 1:
-        tree = train_tree(ds.x_train, ds.y_train, ds.n_classes)
-        pt = to_parallel(tree)
-        problem = search.build_tree_problem(pt, ds.x_test, ds.y_test)
-        kind = "tree"
-    else:
-        forest = train_forest(ds.x_train, ds.y_train, ds.n_classes,
-                              n_trees=args.trees)
-        problem = search.build_forest_problem(forest, ds.x_test, ds.y_test)
-        kind = f"forest[{args.trees}]"
+    from repro.families import get_family
 
-    print(f"== {args.dataset} {kind}: comparators={problem.n_comparators} "
-          f"leaves={problem.n_leaves} exact_acc={problem.exact_accuracy:.3f} "
+    fam = get_family(args.family)
+    if args.family == "mlp":
+        problem = fam.build_problem(args.dataset, n_hidden=args.hidden)
+        kind = f"mlp[h={args.hidden}]"
+    else:
+        problem = fam.build_problem(args.dataset, n_trees=args.trees)
+        kind = "tree" if args.trees <= 1 else f"forest[{args.trees}]"
+
+    print(f"== {args.dataset} {fam.describe(problem)} "
           f"exact_area={problem.exact_area_mm2:.1f}mm^2 "
           f"power={area.power_mw(problem.exact_area_mm2):.2f}mW ==")
 
@@ -376,11 +399,27 @@ def main(argv=None) -> None:
         import jax.numpy as jnp
         from repro.core import rtl
         if best is not None:
-            bits, t_int = search.decode_chromosome(problem,
-                                                   jnp.asarray(genes))
-            verilog = rtl.emit_design(search.problem_ptrees(problem),
-                                      np.asarray(bits), np.asarray(t_int),
-                                      problem.n_classes)
+            if args.family == "mlp":
+                from repro.core import netlist
+                from repro.families import printed_mlp as pm_mod
+
+                bits_a, margin_a = pm_mod.decode_design(np.asarray(genes))
+                h = problem.n_hidden
+                w1 = pm_mod.effective_weights(problem.w1_master,
+                                              bits_a[:h], margin_a[:h])
+                w2 = pm_mod.effective_weights(problem.w2_master,
+                                              bits_a[h:], margin_a[h:])
+                circuit = netlist.build_mlp_circuit(
+                    w1, w2, problem.shift, problem.n_classes)
+                verilog = rtl.emit_circuit_verilog(
+                    circuit, module_name=f"printed_mlp_{args.dataset}")
+            else:
+                bits, t_int = search.decode_chromosome(problem,
+                                                       jnp.asarray(genes))
+                verilog = rtl.emit_design(search.problem_ptrees(problem),
+                                          np.asarray(bits),
+                                          np.asarray(t_int),
+                                          problem.n_classes)
             path = os.path.join(args.out, f"bespoke_{args.dataset}.v")
             with open(path, "w") as f:
                 f.write(verilog)
@@ -396,9 +435,11 @@ def main(argv=None) -> None:
                   f"{', '.join(p['rtl'] for p in pts[:3])}"
                   f"{', ...' if len(pts) > 3 else ''})")
         if args.verify_rtl:
+            oracle = ("tensor predict" if args.family == "mlp"
+                      else "predict_votes")
             print(f"RTL verified: {len(pts)}/{len(pts)} pareto points "
                   f"bit-exact over {problem.x8.shape[0]} test samples "
-                  f"(netlist sim == predict_votes == kernel backend)")
+                  f"(netlist sim == {oracle} == kernel backend)")
         gaps = search.netlist_area_ratios(pts)
         if gaps:
             print(f"estimated-vs-netlist area: netlist/LUT ratio "

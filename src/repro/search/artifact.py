@@ -37,7 +37,7 @@ REQUIRED_TOP_KEYS = frozenset({
     "feature", "threshold", "path", "path_len", "n_neg", "leaf_class",
     "exact_accuracy", "exact_area_mm2", "rtl_verified", "pareto",
 })
-OPTIONAL_TOP_KEYS = frozenset({"dataset"})
+OPTIONAL_TOP_KEYS = frozenset({"dataset", "family"})
 REQUIRED_POINT_KEYS = frozenset({
     "acc_loss", "norm_area", "area_mm2", "area_netlist_mm2",
     "netlist_gates", "bits", "margin", "t_int", "genes",
@@ -72,6 +72,11 @@ def validate_payload(payload: dict, where: str = "payload") -> dict:
         raise ValueError(f"pareto artifact {where}: expected a JSON object, "
                          f"got {type(payload).__name__}")
     _check_keys(payload, REQUIRED_TOP_KEYS, OPTIONAL_TOP_KEYS, where)
+    family = payload.get("family", "tree")
+    if family != "tree":
+        raise ValueError(
+            f"pareto artifact {where}: family {family!r} does not match the "
+            f"tree schema (load through repro.families.family_of_payload)")
     points = payload["pareto"]
     if not isinstance(points, list):
         raise ValueError(f"pareto artifact {where}: 'pareto' must be a list")
@@ -144,6 +149,7 @@ class ParetoArtifact:
     exact_area_mm2: float
     dataset: str | None
     points: list
+    family: str = "tree"
 
     @property
     def n_comparators(self) -> int:
@@ -198,8 +204,17 @@ class ParetoArtifact:
         return ptrees
 
 
-def from_payload(payload: dict, where: str = "payload") -> ParetoArtifact:
-    """Validate a payload dict and materialize the `ParetoArtifact`."""
+def from_payload(payload: dict, where: str = "payload"):
+    """Validate a payload dict and materialize the family's artifact.
+
+    Legacy payloads (no `family` key) and `family: "tree"` ones validate
+    against the tree schema here; any other family tag dispatches to that
+    family's own loader (`repro.families`), so every consumer of
+    `load_pareto_artifact` transparently handles MLP artifacts too.
+    """
+    if isinstance(payload, dict) and payload.get("family", "tree") != "tree":
+        from repro.families import family_of_payload
+        return family_of_payload(payload).load_artifact(payload)
     validate_payload(payload, where)
     return ParetoArtifact(
         payload=payload,
@@ -220,8 +235,8 @@ def from_payload(payload: dict, where: str = "payload") -> ParetoArtifact:
     )
 
 
-def load_pareto_artifact(path: str) -> ParetoArtifact:
-    """Load + validate a `pareto.json` written by `write_pareto_artifact`."""
+def load_pareto_artifact(path: str):
+    """Load + validate a `pareto.json` (any family, dispatched by tag)."""
     with open(path) as f:
         payload = json.load(f)
     return from_payload(payload, where=path)

@@ -96,12 +96,20 @@ def make_kernel_fitness(problem: SearchProblem, *, block_p: int = 8,
     return fitness
 
 
-def make_fitness(problem: SearchProblem, backend: str = "reference", **kw):
-    """Factory: backend name -> population fitness function."""
-    if backend == "reference":
-        return make_reference_fitness(problem)
-    if backend == "kernel":
+def make_fitness(problem, backend: str = "reference", **kw):
+    """Factory: backend name -> population fitness function.
+
+    Family-agnostic: `SearchProblem`s take the tree routes above; any other
+    registered family's problem dispatches to that family's own
+    `make_fitness` (DESIGN.md §15) so `engine.run_search` stays generic.
+    """
+    if backend not in ("reference", "kernel"):
+        raise ValueError(
+            f"unknown fitness backend {backend!r}; islands is driver-level "
+            f"(use repro.search.engine.run_search), options: {BACKENDS}")
+    if isinstance(problem, SearchProblem):
+        if backend == "reference":
+            return make_reference_fitness(problem)
         return make_kernel_fitness(problem, **kw)
-    raise ValueError(
-        f"unknown fitness backend {backend!r}; islands is driver-level "
-        f"(use repro.search.engine.run_search), options: {BACKENDS}")
+    from repro.families import family_of
+    return family_of(problem).make_fitness(problem, backend, **kw)

@@ -294,7 +294,9 @@ def _run_islands(problem: SearchProblem, cfg: SearchConfig):
     from repro.launch.mesh import make_search_mesh
     from repro.runtime import checkpoint
 
-    fitness = _backends.make_reference_fitness(problem)
+    from repro.families import family_of
+
+    fitness = family_of(problem).make_fitness(problem, "reference")
     # one mesh constructor for every driver (DESIGN.md §13); islands default
     # to a ring over all host devices when --mesh is unset
     mesh = make_search_mesh(cfg.mesh or "auto", axes=("data",))
@@ -406,9 +408,11 @@ def run_search(problem: SearchProblem, cfg: SearchConfig | None = None,
         n_dispatches=n_dispatches,
     )
     if cfg.out_dir:
-        write_pareto_artifact(problem, result, cfg.out_dir,
-                              emit_rtl=cfg.emit_rtl, verify_rtl=cfg.verify_rtl,
-                              dataset=cfg.dataset)
+        from repro.families import family_of
+
+        family_of(problem).write_artifact(
+            problem, result, cfg.out_dir, emit_rtl=cfg.emit_rtl,
+            verify_rtl=cfg.verify_rtl, dataset=cfg.dataset)
     return result
 
 
@@ -510,6 +514,7 @@ def write_pareto_artifact(problem: SearchProblem, result: SearchResult,
         points.append(point)
 
     payload = {
+        "family": "tree",
         "backend": result.backend,
         "wall_s": round(result.wall_s, 3),
         "n_evaluations": result.n_evaluations,

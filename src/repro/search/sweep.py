@@ -258,13 +258,20 @@ def population_objectives(pp: PaddedProblem, pop):
 
 @dataclasses.dataclass(frozen=True)
 class Bucket:
-    """A set of problems sharing one padded shape (N, L, C, F, B)."""
+    """A set of problems of ONE family sharing a padded operand shape.
+
+    Tree buckets carry dims (N, L, C, F, B); MLP buckets (H, C, F, B).
+    Problems of different families never share a bucket: their padded
+    pytrees are different types and cannot stack (DESIGN.md §15).
+    """
     names: tuple[str, ...]
-    dims: tuple[int, int, int, int, int]
+    dims: tuple[int, ...]
+    family: str = "tree"
 
     def dims_dict(self) -> dict:
-        keys = ("n_comparators", "n_leaves", "n_classes", "n_features",
-                "n_samples")
+        keys = (("n_comparators", "n_leaves", "n_classes", "n_features",
+                 "n_samples") if self.family == "tree"
+                else ("n_hidden", "n_classes", "n_features", "n_samples"))
         return dict(zip(keys, self.dims))
 
 
@@ -274,22 +281,27 @@ def _eval_cost(dims: tuple[int, ...]) -> float:
     return float(bp) * (np_ + np_ * lp + lp * cp)
 
 
-def plan_buckets(problems: dict[str, SearchProblem], *,
+def plan_buckets(problems: dict, *,
                  granule: int = GRANULE,
                  max_buckets: int = DEFAULT_MAX_BUCKETS) -> list[Bucket]:
-    """Group problems by power-of-two-rounded operand shape, then greedily
-    merge the pair costing the least extra padded compute until at most
-    `max_buckets` buckets remain. Deterministic given the problem dict
+    """Group problems by (family, power-of-two-rounded operand shape), then
+    greedily merge the SAME-FAMILY pair costing the least extra padded
+    compute until at most `max_buckets` buckets remain (a mixed-family
+    campaign may exceed `max_buckets` when no intra-family merge is left —
+    cross-family stacks cannot exist). Deterministic given the problem dict
     (iteration is name-sorted); merged dims are elementwise maxima, so they
     stay powers of two."""
+    from repro.families import family_of, get_family
+
     if max_buckets < 1:
         raise ValueError(f"max_buckets must be >= 1, got {max_buckets}")
     groups: dict[tuple, list[str]] = {}
     for name in sorted(problems):
-        key = tuple(_round_up_pow2(d, granule)
-                    for d in problem_dims(problems[name]))
-        groups.setdefault(key, []).append(name)
-    buckets = [Bucket(names=tuple(v), dims=k)
+        fam = family_of(problems[name])
+        dims = tuple(_round_up_pow2(d, granule)
+                     for d in fam.problem_dims(problems[name]))
+        groups.setdefault((fam.name, dims), []).append(name)
+    buckets = [Bucket(names=tuple(v), dims=k[1], family=k[0])
                for k, v in sorted(groups.items())]
 
     while len(buckets) > max_buckets:
@@ -297,16 +309,21 @@ def plan_buckets(problems: dict[str, SearchProblem], *,
         for i in range(len(buckets)):
             for j in range(i + 1, len(buckets)):
                 bi, bj = buckets[i], buckets[j]
+                if bi.family != bj.family:
+                    continue
+                cost = get_family(bi.family).eval_cost
                 merged = tuple(max(a, b) for a, b in zip(bi.dims, bj.dims))
-                extra = (_eval_cost(merged) * (len(bi.names) + len(bj.names))
-                         - _eval_cost(bi.dims) * len(bi.names)
-                         - _eval_cost(bj.dims) * len(bj.names))
+                extra = (cost(merged) * (len(bi.names) + len(bj.names))
+                         - cost(bi.dims) * len(bi.names)
+                         - cost(bj.dims) * len(bj.names))
                 if best is None or extra < best[0]:
                     best = (extra, i, j, merged)
+        if best is None:  # only cross-family pairs left: cannot merge further
+            break
         _, i, j, merged = best
         buckets[i] = Bucket(names=tuple(sorted(buckets[i].names
                                                + buckets[j].names)),
-                            dims=merged)
+                            dims=merged, family=buckets[i].family)
         del buckets[j]
     return sorted(buckets, key=lambda b: b.names)
 
@@ -402,6 +419,8 @@ def run_sweep(problems: dict[str, SearchProblem],
                 f"pop_size={cfg.pop_size} not divisible by the mesh's pop "
                 f"axis ({mesh.shape['pop']})")
 
+    from repro.families import get_family
+
     names_sorted = sorted(problems)
     keys = _problem_keys(names_sorted, cfg.seed)
     buckets = plan_buckets(problems, granule=cfg.granule,
@@ -414,10 +433,13 @@ def run_sweep(problems: dict[str, SearchProblem],
     bucket_runs: list[BucketRun] = []
     for bucket in buckets:
         t_b = time.time()
-        padded = [pad_problem(problems[n], bucket.dims) for n in bucket.names]
+        fam = get_family(bucket.family)
+        fam_objectives = fam.population_objectives
+        padded = [fam.pad_problem(problems[n], bucket.dims)
+                  for n in bucket.names]
         bucket_keys = jnp.stack([keys[n] for n in bucket.names])
-        n_genes = 2 * bucket.dims[0]
-        seed_genes = quant.exact_genes(bucket.dims[0])
+        n_genes = fam.padded_n_genes(bucket.dims)
+        seed_genes = fam.padded_exact_genes(bucket.dims)
 
         if cfg.vmapped:
             n_real = len(padded)
@@ -433,12 +455,12 @@ def run_sweep(problems: dict[str, SearchProblem],
                         [bucket_keys, jnp.tile(bucket_keys[-1:], (pad_k, 1))])
             stacked = stack_padded(padded)
             init = jax.jit(nsga2.make_batched_init(
-                population_objectives, n_genes, nsga_cfg,
+                fam_objectives, n_genes, nsga_cfg,
                 seed_genes=seed_genes))
             states = init(bucket_keys, stacked)
             if mesh is None:
                 chunk = jax.jit(nsga2.make_batched_chunk(
-                    population_objectives, nsga_cfg, cfg.n_generations))
+                    fam_objectives, nsga_cfg, cfg.n_generations))
                 states = chunk(states, stacked)
             else:
                 # lay the stack over the (bucket, pop) mesh and advance the
@@ -454,7 +476,7 @@ def run_sweep(problems: dict[str, SearchProblem],
                 stacked = jax.tree.map(
                     lambda a: jax.device_put(a, ctx_shard), stacked)
                 chunk = dist.make_sharded_batched_chunk(
-                    population_objectives, mesh, nsga_cfg,
+                    fam_objectives, mesh, nsga_cfg,
                     cfg.n_generations)
                 states = chunk(states, stacked)
             states = jax.device_get(states)
@@ -470,10 +492,10 @@ def run_sweep(problems: dict[str, SearchProblem],
             # differently; eager evaluation likewise) — that symmetry is
             # what the bit-exactness contract rests on.
             init_fn = jax.jit(lambda key, pp: nsga2.init_state(
-                key, lambda pop: population_objectives(pp, pop),
+                key, lambda pop: fam_objectives(pp, pop),
                 n_genes, nsga_cfg, seed_genes=seed_genes))
             chunk_fn = jax.jit(lambda state, pp: nsga2.make_chunk(
-                lambda pop: population_objectives(pp, pop),
+                lambda pop: fam_objectives(pp, pop),
                 nsga_cfg, cfg.n_generations)(state))
             per_problem = []
             n_dispatches = 0
@@ -487,7 +509,8 @@ def run_sweep(problems: dict[str, SearchProblem],
 
         for name, state in zip(bucket.names, per_problem):
             problem = problems[name]
-            genes = np.asarray(state.genes)[:, :problem.n_genes]  # unpad
+            genes = fam.unpad_genes(problem, np.asarray(state.genes),
+                                    bucket.dims)
             objs = np.asarray(state.objs)
             p_objs, p_genes = nsga2.pareto_front(objs, genes)
             result = _engine.SearchResult(
@@ -501,7 +524,7 @@ def run_sweep(problems: dict[str, SearchProblem],
             )
             results[name] = result
             if cfg.out_dir:
-                _engine.write_pareto_artifact(
+                fam.write_artifact(
                     problem, result, os.path.join(cfg.out_dir, name),
                     emit_rtl=cfg.emit_rtl, verify_rtl=cfg.verify_rtl,
                     dataset=name)
@@ -515,8 +538,13 @@ def run_sweep(problems: dict[str, SearchProblem],
 # ---------------------------------------------------------------------------
 
 def build_problems(datasets, n_trees: int = 1,
-                   verbose: bool = False) -> dict[str, SearchProblem]:
-    """Train the exact bespoke tree (or forest, `n_trees > 1`) per dataset."""
+                   verbose: bool = False, *, mlp_datasets=(),
+                   n_hidden: int = 16) -> dict:
+    """Train the exact design per dataset: bespoke trees (or forests,
+    `n_trees > 1`) for `datasets`, printed MLPs for `mlp_datasets`
+    (campaign keys suffixed `_mlp` so one dataset can run in both
+    families). A mixed campaign flows through the same `run_sweep`; the
+    bucket planner keeps the families apart (DESIGN.md §15)."""
     from repro.core.forest import train_forest
     from repro.core.train import train_tree
     from repro.core.tree import to_parallel
@@ -539,6 +567,17 @@ def build_problems(datasets, n_trees: int = 1,
         if verbose:
             print(f"  {name}: comparators={problem.n_comparators} "
                   f"leaves={problem.n_leaves} "
+                  f"exact_acc={problem.exact_accuracy:.3f} "
+                  f"({time.time() - t0:.1f}s)")
+    for name in mlp_datasets:
+        from repro.families import get_family
+
+        t0 = time.time()
+        problem = get_family("mlp").build_problem(name, n_hidden=n_hidden)
+        out[f"{name}_mlp"] = problem
+        if verbose:
+            print(f"  {name}_mlp: hidden={problem.n_hidden} "
+                  f"shift={problem.shift} "
                   f"exact_acc={problem.exact_accuracy:.3f} "
                   f"({time.time() - t0:.1f}s)")
     return out
@@ -586,14 +625,25 @@ def write_sweep_report(sweep: SweepResult,
         problem = problems[name]
         paper1 = PAPER_TABLE1.get(name)
         paper2 = PAPER_TABLE2_NORM.get(name)
-        row: dict = {
-            "exact_accuracy": round(problem.exact_accuracy, 4),
-            "n_comparators": problem.n_comparators,
-            "n_trees": problem.n_trees,
-            "exact_area_mm2": round(problem.exact_area_mm2, 2),
-            "n_pareto_points": int(len(result.pareto_objs)),
-            "wall_s": round(result.wall_s, 2),
-        }
+        if hasattr(problem, "n_comparators"):   # tree row (schema unchanged)
+            row: dict = {
+                "exact_accuracy": round(problem.exact_accuracy, 4),
+                "n_comparators": problem.n_comparators,
+                "n_trees": problem.n_trees,
+                "exact_area_mm2": round(problem.exact_area_mm2, 2),
+                "n_pareto_points": int(len(result.pareto_objs)),
+                "wall_s": round(result.wall_s, 2),
+            }
+        else:                                   # printed-MLP row
+            row = {
+                "family": "mlp",
+                "exact_accuracy": round(problem.exact_accuracy, 4),
+                "n_hidden": problem.n_hidden,
+                "exact_area_mm2": round(problem.exact_area_mm2, 2),
+                "n_pareto_points": int(len(result.pareto_objs)),
+                "wall_s": round(result.wall_s, 2),
+            }
+            paper1 = paper2 = None  # paper tables are tree-family numbers
         if paper1:
             row["paper_accuracy"] = paper1[0]
             row["accuracy_delta"] = round(problem.exact_accuracy - paper1[0], 4)
@@ -629,6 +679,7 @@ def write_sweep_report(sweep: SweepResult,
         "meta": meta or {},
         "buckets": [{
             "datasets": list(r.bucket.names),
+            "family": r.bucket.family,
             "dims": r.bucket.dims_dict(),
             "n_dispatches": r.n_dispatches,
             "wall_s": round(r.wall_s, 2),
@@ -672,14 +723,14 @@ def _report_markdown(payload: dict, max_loss: float) -> str:
         f"{payload['serial_baseline_dispatches']}); "
         f"wall {payload['wall_s']}s.",
         "",
-        "| bucket | datasets | padded (N, L, C, F, B) | dispatches |",
-        "|---|---|---|---|",
+        "| bucket | family | datasets | padded dims | dispatches |",
+        "|---|---|---|---|---|",
     ]
     for i, b in enumerate(payload["buckets"]):
         d = b["dims"]
-        dims = (f"({d['n_comparators']}, {d['n_leaves']}, {d['n_classes']}, "
-                f"{d['n_features']}, {d['n_samples']})")
-        lines.append(f"| {i} | {', '.join(b['datasets'])} | {dims} "
+        dims = "(" + ", ".join(str(v) for v in d.values()) + ")"
+        lines.append(f"| {i} | {b.get('family', 'tree')} "
+                     f"| {', '.join(b['datasets'])} | {dims} "
                      f"| {b['n_dispatches']} |")
     lines += [
         "",
@@ -696,9 +747,12 @@ def _report_markdown(payload: dict, max_loss: float) -> str:
                if pacc is not None else f"{row['exact_accuracy']:.3f} (—)")
         dacc = (f"{row['accuracy_delta']:+.3f}"
                 if "accuracy_delta" in row else "—")
-        ncmp = (f"{row['n_comparators']} ({row['paper_n_comparators']})"
-                if "paper_n_comparators" in row
-                else f"{row['n_comparators']} (—)")
+        if "n_comparators" in row:
+            ncmp = (f"{row['n_comparators']} ({row['paper_n_comparators']})"
+                    if "paper_n_comparators" in row
+                    else f"{row['n_comparators']} (—)")
+        else:
+            ncmp = f"mlp h={row['n_hidden']}"
         at = row.get("at_budget")
         if at:
             pna = at.get("paper_norm_area")

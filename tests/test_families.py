@@ -1,0 +1,196 @@
+"""Family-pluggable search engine (DESIGN.md §15).
+
+Pins the `ClassifierFamily` seam from both sides:
+
+  - the tree path is UNCHANGED: tree `pareto.json` payloads carry the new
+    `family` tag yet round-trip through the legacy loader, and the legacy
+    validator refuses foreign families with a clear error;
+  - the printed-MLP family is a full citizen: reference == kernel fitness
+    bit-for-bit, `run_search --out` emits + verifies RTL through the same
+    oracle triangle, artifacts load back and serve through
+    `runtime.classify.ClassifyServer` bit-exact against the gate-level
+    netlist simulation;
+  - sweep machinery is family-aware: `plan_buckets` never merges across
+    families, padded problems stack into one vmapped fitness whose rows are
+    bit-identical to the per-problem serial oracle, and `unpad_genes`
+    inverts the padded (bits, margin) gene layout exactly.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import search
+from repro.core import netlist
+from repro.datasets import load_dataset
+from repro.families import FAMILIES, family_of, family_of_payload, get_family
+from repro.families import printed_mlp as pm
+from repro.runtime.classify import ClassifyServer
+from repro.search import sweep
+from repro.search.artifact import load_pareto_artifact, validate_payload
+
+
+@pytest.fixture(scope="module")
+def mlp_problem():
+    return pm.build_problem("seeds", n_hidden=4, n_steps=120)
+
+
+@pytest.fixture(scope="module")
+def tree_problem():
+    from repro.core.train import train_tree
+    from repro.core.tree import to_parallel
+    ds = load_dataset("seeds")
+    pt = to_parallel(train_tree(ds.x_train, ds.y_train, ds.n_classes))
+    return search.build_tree_problem(pt, ds.x_test, ds.y_test)
+
+
+# ---------------------------------------------------------------------------
+# registry + tree regression
+# ---------------------------------------------------------------------------
+
+def test_registry_and_dispatch(mlp_problem, tree_problem):
+    assert set(FAMILIES) == {"tree", "mlp"}
+    assert family_of(tree_problem).name == "tree"
+    assert family_of(mlp_problem).name == "mlp"
+    with pytest.raises(ValueError, match="unknown classifier family"):
+        get_family("forest2000")
+    with pytest.raises(TypeError):
+        family_of(object())
+
+
+def test_tree_artifact_family_tag_round_trip(tree_problem, tmp_path):
+    """Tree pareto.json gains family='tree' and still loads through the
+    legacy single-family loader — the zero-behavior-change contract."""
+    out = str(tmp_path / "tree_run")
+    search.run_search(tree_problem, backend="reference", pop_size=8,
+                      n_generations=2, out_dir=out, dataset="seeds")
+    with open(os.path.join(out, "pareto.json")) as f:
+        payload = json.load(f)
+    assert payload["family"] == "tree"
+    validate_payload(payload)                      # legacy validator accepts
+    art = load_pareto_artifact(os.path.join(out, "pareto.json"))
+    assert art.family == "tree"
+    assert art.n_trees == 1 and len(art.points) >= 1
+    # the legacy tree validator must refuse foreign families loudly…
+    foreign = dict(payload, family="mlp")
+    with pytest.raises(ValueError, match="family"):
+        validate_payload(foreign)
+    # …and family_of_payload must route untagged payloads to the tree family
+    untagged = {k: v for k, v in payload.items() if k != "family"}
+    assert family_of_payload(untagged).name == "tree"
+
+
+# ---------------------------------------------------------------------------
+# printed-MLP fitness: reference == kernel, exact seed
+# ---------------------------------------------------------------------------
+
+def test_mlp_reference_equals_kernel_fitness(mlp_problem):
+    ref = pm.make_reference_fitness(mlp_problem)
+    ker = pm.make_kernel_fitness(mlp_problem, interpret=True)
+    rng = np.random.default_rng(0)
+    pop = jnp.asarray(rng.uniform(size=(16, mlp_problem.n_genes)),
+                      jnp.float32)
+    np.testing.assert_array_equal(np.asarray(ref(pop)), np.asarray(ker(pop)))
+
+
+def test_mlp_exact_genes_near_origin(mlp_problem):
+    """The seeded exact design decodes to (acc_loss, norm_area) == (0, 1)
+    up to jit fusion rounding (same ulp-level story as the tree family)."""
+    ref = pm.make_reference_fitness(mlp_problem)
+    objs = np.asarray(ref(jnp.asarray(mlp_problem.exact_genes()[None])))
+    np.testing.assert_allclose(objs[0], [0.0, 1.0], atol=1e-6)
+    bits, margin = pm.decode_design(mlp_problem.exact_genes())
+    assert (bits == pm.MASTER_WBITS).all() and (margin == 0).all()
+
+
+# ---------------------------------------------------------------------------
+# printed-MLP full loop: search -> RTL-verified artifact -> serving
+# ---------------------------------------------------------------------------
+
+def test_mlp_full_loop_artifact_and_serving(mlp_problem, tmp_path):
+    out = str(tmp_path / "mlp_run")
+    search.run_search(mlp_problem, backend="reference", pop_size=8,
+                      n_generations=2, out_dir=out, dataset="seeds",
+                      emit_rtl=True, verify_rtl=True)
+    with open(os.path.join(out, "pareto.json")) as f:
+        payload = json.load(f)
+    assert payload["family"] == "mlp"
+    assert payload["rtl_verified"] is True
+    # the legacy loader dispatches by tag to the MLP artifact class
+    art = load_pareto_artifact(os.path.join(out, "pareto.json"))
+    assert art.family == "mlp"
+    assert art.n_hidden == 4 and art.n_classes == mlp_problem.n_classes
+    # schema is enforced: dropping a required key is a loud ValueError
+    broken = dict(payload)
+    del broken["shift"]
+    with pytest.raises(ValueError, match="shift"):
+        pm.validate_payload(broken)
+    # serve the best point and pin it to the gate-level netlist oracle
+    ds = load_dataset("seeds")
+    idx = art.best_under_loss(1.0)
+    server = ClassifyServer.from_artifact(art, idx, backend="reference")
+    got = server.classify(ds.x_test)
+    w1, w2 = art.point_design(idx)
+    circuit = netlist.build_mlp_circuit(w1, w2, art.shift, art.n_classes)
+    want = np.asarray(netlist.simulate(circuit, server.featurize(ds.x_test)))
+    np.testing.assert_array_equal(got, want)
+    acc = float((got == ds.y_test).mean())
+    assert acc == pytest.approx(art.point_accuracy(idx))
+
+
+# ---------------------------------------------------------------------------
+# sweep: family-pure buckets, vmapped == serial, unpad round-trip
+# ---------------------------------------------------------------------------
+
+def test_plan_buckets_never_merge_across_families(mlp_problem, tree_problem):
+    problems = {"seeds": tree_problem, "seeds_mlp": mlp_problem}
+    buckets = sweep.plan_buckets(problems, max_buckets=1)
+    fams = {b.family for b in buckets}
+    assert fams == {"tree", "mlp"}
+    for b in buckets:
+        assert {family_of(problems[n]).name for n in b.names} == {b.family}
+
+
+def test_mlp_vmapped_bucket_matches_serial(mlp_problem):
+    """Two MLP problems padded into one bucket: the vmapped stacked fitness
+    is bit-identical to each problem's serial objectives at the same padded
+    dims — the sweep-correctness invariant (DESIGN.md §11/§15)."""
+    other = pm.build_problem("vertebral", n_hidden=3, n_steps=120)
+    fam = get_family("mlp")
+    dims = tuple(max(a, b) for a, b in zip(
+        fam.problem_dims(mlp_problem), fam.problem_dims(other)))
+    ops = [fam.pad_problem(p, dims) for p in (mlp_problem, other)]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *ops)
+    n_genes = fam.padded_n_genes(dims)
+    rng = np.random.default_rng(1)
+    pops = jnp.asarray(rng.uniform(size=(2, 12, n_genes)), jnp.float32)
+    batched = jax.jit(jax.vmap(pm.population_objectives))(stacked, pops)
+    serial = jax.jit(pm.population_objectives)
+    for i in range(2):
+        np.testing.assert_array_equal(np.asarray(batched[i]),
+                                      np.asarray(serial(ops[i], pops[i])))
+
+
+def test_mlp_unpad_genes_round_trip(mlp_problem):
+    fam = get_family("mlp")
+    dims = (8, 4, 16, 256)          # strictly larger than seeds h=4
+    n_genes = fam.padded_n_genes(dims)
+    rng = np.random.default_rng(2)
+    padded_pop = rng.uniform(size=(5, n_genes)).astype(np.float32)
+    unpadded = fam.unpad_genes(mlp_problem, padded_pop, dims)
+    assert unpadded.shape == (5, mlp_problem.n_genes)
+    h, hp = mlp_problem.n_hidden, dims[0]
+    np.testing.assert_array_equal(unpadded[:, :2 * h],
+                                  padded_pop[:, :2 * h])
+    np.testing.assert_array_equal(unpadded[:, 2 * h:],
+                                  padded_pop[:, 2 * hp:2 * hp + unpadded.shape[1] - 2 * h])
+    # padded exact genes decode to the exact design on the REAL slice
+    exact = fam.padded_exact_genes(dims)
+    bits, margin = pm.decode_design(
+        fam.unpad_genes(mlp_problem, exact[None], dims)[0])
+    assert (bits == pm.MASTER_WBITS).all() and (margin == 0).all()

@@ -29,7 +29,13 @@ or hand-mangled artifact fails loudly:
      pair-comparisons by exactly the shard count, a single dispatch per
      sharded run, and at least one >= SHARDED_MIN_SHARDS-way mesh row
      (deterministic — checked even in --smoke).
-  6. invariant: `serving` rows (DESIGN.md §14) must show steady-state
+  6. invariant: `mlp_fitness` rows (DESIGN.md §15) must show the fused
+     qmatmul route streaming the per-chromosome layer-1 weights as int8 —
+     exactly MLP_W1_STREAM_REDUCTION below the reference path's f32 gather
+     (deterministic — checked even in --smoke). The timing ratio is
+     recorded, not gated: on CPU the kernel leg runs in Pallas interpret
+     mode, so its wall-clock says nothing about TPU behavior.
+  7. invariant: `serving` rows (DESIGN.md §14) must show steady-state
      serving allocating zero new device arrays and recompiling zero step
      programs after the ping-pong warmup, buckets on the power-of-two grid
      covering the batch (all deterministic — checked even in --smoke), and
@@ -135,6 +141,19 @@ SCHEMA = {
         "dispatches_per_generation": float,
         "us_per_generation": float,
     },
+    "mlp_fitness": {
+        "dataset": str,
+        "n_features": int,
+        "n_hidden": int,
+        "n_classes": int,
+        "n_samples": int,
+        "us_per_chromosome_ref": float,
+        "us_per_chromosome_kernel": float,
+        "kernel_speedup_vs_ref": float,
+        "w1_stream_bytes_per_eval_ref": int,
+        "w1_stream_bytes_per_eval_kernel": int,
+        "w1_stream_reduction": float,
+    },
     "serving": {
         "dataset": str,
         "n_trees": int,
@@ -162,6 +181,12 @@ SCHEMA = {
 # enforced in --smoke too.
 SERVING_FLOOR_MIN_BATCH = 32
 SERVING_MIN_BATCHED_SPEEDUP = 1.0
+
+# DESIGN.md §15: the printed-MLP fused route streams the gathered layer-1
+# weight stack to qmatmul as int8 (1 byte/weight, dequantized on-chip per
+# tile); the reference einsum reads the f32 gather (4 bytes/weight). The
+# ratio is exactly 4 by construction — analytic, enforced in --smoke too.
+MLP_W1_STREAM_REDUCTION = 4.0
 
 # DESIGN.md §13: the hierarchical sort hands each shard a (2P/S, 2P) row
 # block of the pool domination matrix — an exact S-fold split of the
@@ -302,6 +327,25 @@ def check_deterministic(bench: dict, errors: list[str]) -> None:
                 f"[{row.get('n_trees')}]): hbm_write_reduction={red:.1f} < "
                 f"{HBM_MIN_REDUCTION} — the §12 fused kernel no longer cuts "
                 f"the O(P·B·C) vote-tensor write traffic")
+    for i, row in enumerate(bench.get("mlp_fitness", [])):
+        if not isinstance(row, dict):
+            continue
+        ref = row.get("w1_stream_bytes_per_eval_ref")
+        ker = row.get("w1_stream_bytes_per_eval_kernel")
+        red = row.get("w1_stream_reduction")
+        if not all(isinstance(v, (int, float)) and not isinstance(v, bool)
+                   for v in (ref, ker, red)):
+            continue
+        if ker <= 0 or abs(red - ref / ker) > 1e-6 * max(red, 1.0):
+            errors.append(
+                f"mlp_fitness[{i}]: w1_stream_reduction ({red}) does not "
+                f"match ref/kernel bytes ({ref}/{ker})")
+        elif red < MLP_W1_STREAM_REDUCTION:
+            errors.append(
+                f"mlp_fitness[{i}] ({row.get('dataset')}"
+                f"[h={row.get('n_hidden')}]): w1_stream_reduction={red:.1f} "
+                f"< {MLP_W1_STREAM_REDUCTION} — the §15 fused route no "
+                f"longer streams layer-1 weights as int8")
     max_shards = 0
     for i, row in enumerate(bench.get("sharded_search", [])):
         if not isinstance(row, dict):

@@ -94,7 +94,10 @@ def _timeit_pair(fn_a, fn_b, args_a, args_b, trials=6, min_batch_s=0.03):
 def _looped_forest_fitness(forest, problem):
     """The historical forest fitness: a Python loop of K per-tree programs
     (gather + small matmul each), kept here as the benchmark baseline the
-    fused engine is measured against."""
+    fused engine is measured against. Decodes the cross-layer 3N+1 gene
+    layout (DESIGN.md §16) — truncation folded into effective operands,
+    saturating vote cap — so it computes the same function as the fused
+    paths, one tree program at a time."""
     x8 = problem.x8
     y = problem.y
     thresholds = jnp.concatenate(
@@ -103,16 +106,38 @@ def _looped_forest_fitness(forest, problem):
     exact_area = problem.exact_area_mm2
     lut, offsets = problem.area_lut, problem.lut_offsets
     overhead = problem.overhead_mm2
+    vote_exact = jnp.float32(problem.vote_mm2_exact)
+    vote_approx = jnp.float32(problem.vote_mm2_approx)
+    n_classes = forest.n_classes
 
     @jax.jit
     def fitness(pop):
         def one(genes):
-            bits, marg = quant.decode_genes(genes)
-            pred = forest_mod.forest_predict(forest, x8, bits, marg)
-            acc = jnp.mean((pred == y).astype(jnp.float32))
-            t_int = quant.substitute(
+            from repro.core.tree import leaves_from_decisions
+
+            bits, marg, trunc, vote = quant.decode_tree_genes(genes)
+            t_sub = quant.substitute(
                 quant.threshold_to_int(thresholds, bits), marg, bits)
-            a = lut[offsets[bits] + t_int].sum() + overhead
+            bits_eff = bits - trunc
+            t_eff = jnp.right_shift(t_sub, trunc)
+            votes = jnp.zeros((x8.shape[0], n_classes), jnp.float32)
+            off = 0
+            for pt in forest.ptrees:
+                n = pt.n_comparators
+                x_g = x8[:, jnp.asarray(pt.feature)]
+                x_p = quant.inputs_at_precision(x_g, bits_eff[off:off + n])
+                d = x_p > t_eff[None, off:off + n]
+                leaf = leaves_from_decisions(d, jnp.asarray(pt.path),
+                                             jnp.asarray(pt.path_len))
+                cls = jnp.asarray(pt.leaf_class)[leaf]
+                votes = votes + jax.nn.one_hot(cls, n_classes)
+                off += n
+            vote_cap = jnp.where(vote > 0, jnp.float32(1.0),
+                                 jnp.float32(jnp.inf))
+            pred = jnp.argmax(jnp.minimum(votes, vote_cap), axis=1)
+            acc = jnp.mean((pred == y).astype(jnp.float32))
+            a = lut[offsets[bits_eff] + t_eff].sum() + overhead
+            a = a + jnp.where(jnp.isfinite(vote_cap), vote_approx, vote_exact)
             return jnp.stack([exact_acc - acc, a / exact_area])
         return jax.vmap(one)(pop)
 
@@ -191,26 +216,34 @@ def _seed_reference_fitness(problem):
     @jax.jit
     def fitness(pop):
         def one(genes):
-            bits, margin = quant.decode_genes(genes)
+            bits, margin, trunc, vote = quant.decode_tree_genes(genes)
             t_int = quant.threshold_to_int(problem.threshold, bits)
             t_sub = quant.substitute(t_int, margin, bits)
+            bits_eff = bits - trunc
+            t_eff = jnp.right_shift(t_sub, trunc)
             x_g = problem.x8[:, problem.feature]
-            x_p = quant.inputs_at_precision(x_g, bits)
-            d = (x_p > t_sub[None, :]).astype(jnp.float32)
+            x_p = quant.inputs_at_precision(x_g, bits_eff)
+            d = (x_p > t_eff[None, :]).astype(jnp.float32)
             score = d @ problem.path.T.astype(jnp.float32)
             target = (problem.path_len - problem.n_neg).astype(jnp.float32)
             sat = (score == target[None, :]).astype(jnp.float32)
             cls1h = jax.nn.one_hot(problem.leaf_class, problem.n_classes)
-            pred = jnp.argmax(sat @ cls1h, axis=1)
+            vote_cap = jnp.where(vote > 0, jnp.float32(1.0),
+                                 jnp.float32(jnp.inf))
+            pred = jnp.argmax(jnp.minimum(sat @ cls1h, vote_cap), axis=1)
             acc = jnp.mean((pred == problem.y).astype(jnp.float32))
             # historical double decode for the area term
-            bits2, margin2 = quant.decode_genes(genes)
+            bits2, margin2, trunc2, vote2 = quant.decode_tree_genes(genes)
             t_sub2 = quant.substitute(
                 quant.threshold_to_int(problem.threshold, bits2),
                 margin2, bits2)
             area = problem.area_lut[
-                problem.lut_offsets[bits2] + t_sub2].sum()
+                problem.lut_offsets[bits2 - trunc2]
+                + jnp.right_shift(t_sub2, trunc2)].sum()
             area = area + problem.overhead_mm2
+            area = area + jnp.where(vote2 > 0,
+                                    jnp.float32(problem.vote_mm2_approx),
+                                    jnp.float32(problem.vote_mm2_exact))
             return jnp.stack([problem.exact_accuracy - acc,
                               area / problem.exact_area_mm2])
         return jax.vmap(one)(pop)
@@ -407,15 +440,20 @@ def _scores_kernel_fitness(problem):
 
     @jax.jit
     def fitness(pop):
-        scale, thr = kops.decode_population(threshold, pop)
-        preds = kops.tree_infer_predict(problem.x8, operands, scale, thr)
+        scale, thr, vote_cap = kops.decode_population(threshold, pop)
+        preds = kops.tree_infer_predict(problem.x8, operands, scale, thr,
+                                        vote_cap)
         acc = jnp.mean((preds == problem.y[None, :]).astype(jnp.float32),
                        axis=1)
-        bits, margin = quant.decode_genes(pop)
-        t_int = quant.threshold_to_int(threshold[None, :], bits)
-        t_sub = quant.substitute(t_int, margin, bits)
-        areas = problem.area_lut[problem.lut_offsets[bits] + t_sub].sum(axis=1)
+        # historical double decode for the area term
+        scale2, t_sub2, bits2, vote_cap2 = kops.decode_population_full(
+            threshold, pop)
+        areas = problem.area_lut[
+            problem.lut_offsets[bits2] + t_sub2].sum(axis=1)
         areas = areas + problem.overhead_mm2
+        areas = areas + jnp.where(jnp.isfinite(vote_cap2),
+                                  jnp.float32(problem.vote_mm2_approx),
+                                  jnp.float32(problem.vote_mm2_exact))
         return jnp.stack(
             [problem.exact_accuracy - acc, areas / problem.exact_area_mm2],
             axis=1,

@@ -91,11 +91,16 @@ def run_search(name, pt, prob, pop=64, gens=40, seed=0, use_kernel=False,
 
 
 def actual_area_mm2(pt, genes) -> float:
-    """Dedup (synthesis) area for one chromosome — the 'actual' oracle."""
-    bits, margin = quant.decode_genes(jnp.asarray(genes))
-    t_int = quant.substitute(
+    """Dedup (synthesis) area for one chromosome — the 'actual' oracle.
+
+    Truncation (DESIGN.md §16) folds into effective precision/threshold
+    before pricing: a k-LSB-truncated p-bit comparator IS a (p-k)-bit one."""
+    bits, margin, trunc, _vote = quant.decode_tree_genes(jnp.asarray(genes))
+    t_sub = quant.substitute(
         quant.threshold_to_int(jnp.asarray(pt.threshold), bits), margin, bits)
-    return area.tree_area_mm2(pt.feature, np.asarray(t_int), np.asarray(bits),
+    bits_eff = np.asarray(bits - trunc)
+    t_eff = np.asarray(jnp.right_shift(t_sub, trunc))
+    return area.tree_area_mm2(pt.feature, t_eff, bits_eff,
                               pt.n_leaves, dedup=True)
 
 

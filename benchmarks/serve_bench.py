@@ -78,7 +78,7 @@ def _build_server(dataset: str, n_trees: int) -> tuple:
     # the exact (8-bit, zero-margin) design: the serving payload every
     # searched point is a shrunken version of
     import jax.numpy as jnp
-    bits, t_int = search.decode_chromosome(
+    bits, t_int, _vote_cap = search.decode_chromosome(
         problem, jnp.asarray(problem.exact_genes()))
     server = ClassifyServer(search.problem_ptrees(problem),
                             np.asarray(bits), np.asarray(t_int),

@@ -69,10 +69,14 @@ def main():
           f"({1/o[1]:.2f}x), power={area.power_mw(a_mm2):.2f}mW "
           f"{'< 3mW: printed-battery OK' if area.power_mw(a_mm2) < 3 else ''}")
 
-    bits, t_int = search.decode_chromosome(prob, jnp.asarray(g))
+    # effective design: decode_chromosome folds comparator truncation into
+    # the returned precision/threshold (DESIGN.md §16), so lowering it with
+    # trunc unset is identical to lowering the pre-truncation design
+    bits, t_int, vote_cap = search.decode_chromosome(prob, jnp.asarray(g))
+    vote_adder = "approx" if np.isfinite(float(vote_cap)) else "exact"
     ptrees = search.problem_ptrees(prob)
     verilog = rtl.emit_design(ptrees, np.asarray(bits), np.asarray(t_int),
-                              prob.n_classes)
+                              prob.n_classes, vote_adder=vote_adder)
     out = f"/tmp/bespoke_{args.dataset}.v"
     with open(out, "w") as f:
         f.write(verilog)
@@ -80,9 +84,10 @@ def main():
 
     # the hardware oracle: gate-level netlist sim vs the tensor program
     circuit = netlist.build_circuit(ptrees, np.asarray(bits),
-                                    np.asarray(t_int), prob.n_classes)
+                                    np.asarray(t_int), prob.n_classes,
+                                    vote_adder=vote_adder)
     sim = np.asarray(netlist.simulate(circuit, prob.x8))
-    ref = np.asarray(search.predict_votes(prob, bits, t_int))
+    ref = np.asarray(search.predict_votes(prob, bits, t_int, vote_cap))
     assert np.array_equal(sim, ref), "netlist simulation diverged"
     counts = netlist.gate_counts(circuit)
     print(f"netlist verified on {sim.shape[0]} samples: "

@@ -1,7 +1,9 @@
 """Dual approximation fitness: chromosome -> (accuracy loss, area).
 
-One chromosome holds 2N genes (paper Fig. 3a): per comparator a precision
-gene (decoded to p in [2,8]) and a margin gene (decoded to m in [-5,+5]).
+One chromosome holds 3N+1 genes (paper Fig. 3a plus DESIGN.md §16): per
+comparator a precision gene (decoded to p in [2,8]), a margin gene (decoded
+to m in [-5,+5]) and an LSB-truncation gene (k in [0,2]), plus one trailing
+vote-adder gene (exact vs saturating-OR majority vote; inert for one tree).
 
 This module is now a thin single-tree adapter over the unified search engine
 in `repro.search` (DESIGN.md §7): `ApproxProblem` IS a
@@ -36,7 +38,7 @@ def build_problem(ptree: ParallelTree, x_test: np.ndarray,
 
 
 def make_fitness_fn(problem: SearchProblem):
-    """Population fitness: (P, 2N) genes -> (P, 2) objectives, jitted.
+    """Population fitness: (P, 3N+1) genes -> (P, 2) objectives, jitted.
 
     Adapter for `repro.search.make_reference_fitness` (pure-jnp backend).
     """

@@ -27,6 +27,8 @@ EGT calibration (printed gates are *large*):
 """
 from __future__ import annotations
 
+import functools
+
 import numpy as np
 
 from repro.core.quant import MAX_BITS, MIN_BITS
@@ -74,21 +76,43 @@ def comparator_area_mm2(t: int, p: int) -> float:
     return n_and * AREA_AND2_MM2 + n_or * AREA_OR2_MM2
 
 
+def trunc_comparator_gate_counts(t: int, p: int, k: int) -> tuple[int, int]:
+    """(n_and2, n_or2) for a k-LSB-truncated p-bit comparator (DESIGN.md §16).
+
+    Dropping the k lowest stages of the hard-wired ``X > t`` chain leaves
+    exactly the exact comparator of width p - k against threshold t >> k —
+    so truncated cells are priced (and lowered) with the same primitives.
+    Width p - k <= 0 degenerates to constant false: zero gates.
+    """
+    if k >= p:
+        return 0, 0
+    return comparator_gate_counts(t >> k, p - k)
+
+
+def trunc_comparator_area_mm2(t: int, p: int, k: int) -> float:
+    n_and, n_or = trunc_comparator_gate_counts(t, p, k)
+    return n_and * AREA_AND2_MM2 + n_or * AREA_OR2_MM2
+
+
 def build_area_lut() -> tuple[np.ndarray, np.ndarray]:
-    """Exhaustive LUT over p in [MIN_BITS, MAX_BITS], t in [0, 2^p).
+    """Exhaustive LUT over p in [0, MAX_BITS], t in [0, 2^p).
 
     Returns (lut, offsets):
       lut: float32[sum 2^p] of comparator areas (mm^2)
       offsets: int32[MAX_BITS+1], LUT row start per precision; entry for
                precision p is lut[offsets[p] + t].
+
+    Rows below MIN_BITS exist because LSB truncation (DESIGN.md §16) shrinks
+    a comparator's *effective* width down to MIN_BITS - MAX_TRUNC (= 0, the
+    constant-false comparator); those rows are all-zero (a 0/1-bit unsigned
+    greater-than needs no gates) but must occupy distinct offsets so
+    `offsets[p_eff] + t_eff` never aliases a wider row.
     """
     offsets = np.zeros(MAX_BITS + 1, dtype=np.int32)
     chunks = []
     pos = 0
     for p in range(0, MAX_BITS + 1):
         offsets[p] = pos
-        if p < MIN_BITS:
-            continue
         row = np.array(
             [comparator_area_mm2(t, p) for t in range(1 << p)], dtype=np.float32
         )
@@ -116,13 +140,40 @@ def build_area_unit_lut() -> tuple[np.ndarray, np.ndarray]:
     pos = 0
     for p in range(0, MAX_BITS + 1):
         offsets[p] = pos
-        if p < MIN_BITS:
-            continue
         row = np.array([comparator_area_units(t, p) for t in range(1 << p)],
                        dtype=np.float32)
         chunks.append(row)
         pos += 1 << p
     return np.concatenate(chunks), offsets
+
+
+# --- forest vote-adder cells (DESIGN.md §16) --------------------------------
+# The vote stage of a K-tree forest is priced from the SAME netlist the
+# hardware lowers to: an isolated vote-stage harness (popcount + argmax chain
+# for the exact adder, saturating OR-tree + 1-bit argmax for the approximate
+# one) is built once per (n_trees, n_classes, mode) and its gate inventory
+# converted to exact integer quanta. Deferred import breaks the
+# netlist -> area module cycle; lru_cache makes repeat pricing free.
+
+
+@functools.lru_cache(maxsize=None)
+def vote_adder_units(n_trees: int, n_classes: int, approx: bool) -> int:
+    """Vote-adder area as exact integer AREA_QUANTUM_MM2 quanta.
+
+    Zero for single-tree designs (K = 1 encodes the winning class directly,
+    no adder exists in either mode — the vote gene is inert there)."""
+    if n_trees <= 1:
+        return 0
+    from repro.core import netlist
+    counts = netlist.vote_adder_gate_counts(n_trees, n_classes, approx=approx)
+    units = gate_area_mm2(*counts) / AREA_QUANTUM_MM2
+    iunits = round(units)
+    assert abs(iunits - units) < 1e-6
+    return iunits
+
+
+def vote_adder_area_mm2(n_trees: int, n_classes: int, approx: bool) -> float:
+    return vote_adder_units(n_trees, n_classes, approx) * AREA_QUANTUM_MM2
 
 
 # --- printed-MLP MAC / activation cells (DESIGN.md §15) ---------------------

@@ -4,7 +4,8 @@ The paper targets single Decision Trees but names Random Forests among the
 hardware-friendly classifier families ([1] evaluates them). A bespoke RF is
 K parallel bespoke trees + a majority-vote adder tree — so the dual
 approximation applies per comparator across the WHOLE forest with one
-chromosome of 2*sum_k(N_k) genes, and cross-tree comparator sharing (CSE)
+chromosome of 3*sum_k(N_k)+1 genes (DESIGN.md §16), and cross-tree
+comparator sharing (CSE)
 makes the joint search strictly richer than per-tree searches: moving two
 trees' thresholds to the SAME hardware-friendly value collapses them into
 one comparator.
@@ -44,7 +45,9 @@ class Forest:
 
     @property
     def n_genes(self) -> int:
-        return 2 * self.n_comparators
+        # cross-layer layout (DESIGN.md §16): 3 genes per comparator plus
+        # the forest-level vote-adder gene
+        return 3 * self.n_comparators + 1
 
 
 def train_forest(x, y, n_classes, n_trees=5, seed=0, feature_frac=0.7):
@@ -112,7 +115,7 @@ def forest_area_mm2(forest: Forest, bits_all, marg_all, dedup=True) -> float:
 
 
 def make_forest_fitness(forest: Forest, x_test, y_test):
-    """(P, 2*N_total) genes -> (P, 2) objectives (accuracy loss, norm area).
+    """(P, 3*N_total+1) genes -> (P, 2) objectives (accuracy loss, norm area).
 
     Thin adapter over the unified engine: builds the block-diagonal
     `SearchProblem` for this forest and returns its reference-backend fitness

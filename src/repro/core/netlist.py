@@ -265,10 +265,17 @@ class NetlistBuilder:
 
 @dataclasses.dataclass
 class ComparatorCell:
+    """One lowered comparator. `bits`/`t_int` are the EFFECTIVE width and
+    substituted threshold the hardware implements — for a k-LSB-truncated
+    cell (DESIGN.md §16) that is (p - k, t' >> k); `trunc` records k for
+    provenance. `core.rtl` prints cells verbatim, so emitted Verilog is
+    always the effective (truncated) comparator."""
+
     feature: int
     bits: int
-    t_int: int      # SUBSTITUTED integer threshold t'
+    t_int: int      # SUBSTITUTED integer threshold t' (effective)
     wire: int       # == 0 (CONST0) when t' = 2^p - 1 folds the cell away
+    trunc: int = 0  # LSB stages dropped from the requested-width cell
 
 
 @dataclasses.dataclass
@@ -310,16 +317,26 @@ def class_bits(n_classes: int) -> int:
 
 
 def build_tree_cells(nb: NetlistBuilder, pt: ParallelTree, bits, t_int,
-                     n_classes: int) -> TreeCells:
-    """Lower one tree's comparators/leaves/votes into the shared builder."""
+                     n_classes: int, trunc=None) -> TreeCells:
+    """Lower one tree's comparators/leaves/votes into the shared builder.
+
+    `trunc` (optional, per-comparator int array) drops the k lowest stages
+    of each comparator chain (DESIGN.md §16): the cell lowered is the exact
+    comparator at width `bits - k` against `t_int >> k` — the construction
+    `core.area.trunc_comparator_gate_counts` prices, so truncated gate
+    counts and the area LUT cannot drift apart either.
+    """
     bits = np.asarray(bits)
     t_int = np.asarray(t_int)
-    comps = [
-        ComparatorCell(int(pt.feature[c]), int(bits[c]), int(t_int[c]),
-                       nb.comparator(int(pt.feature[c]), int(t_int[c]),
-                                     int(bits[c])))
-        for c in range(pt.n_comparators)
-    ]
+    trunc = (np.zeros_like(bits) if trunc is None else np.asarray(trunc))
+    comps = []
+    for c in range(pt.n_comparators):
+        k = int(trunc[c])
+        p_eff = max(int(bits[c]) - k, 0)
+        t_eff = int(t_int[c]) >> k
+        comps.append(ComparatorCell(
+            int(pt.feature[c]), p_eff, t_eff,
+            nb.comparator(int(pt.feature[c]), t_eff, p_eff), trunc=k))
     leaves = []
     for l in range(pt.n_leaves):
         lits = [(c, int(pt.path[l, c]) == 1)
@@ -333,25 +350,39 @@ def build_tree_cells(nb: NetlistBuilder, pt: ParallelTree, bits, t_int,
     return TreeCells(comps, leaves, votes)
 
 
-def build_circuit(ptrees, bits, t_int, n_classes: int) -> Circuit:
+def build_circuit(ptrees, bits, t_int, n_classes: int, trunc=None,
+                  vote_adder: str = "exact") -> Circuit:
     """Tree/forest + decoded chromosome -> verified-hardware netlist.
 
     `bits`/`t_int` are concatenated per-comparator arrays across the K trees
-    (the `SearchProblem` chromosome layout). K = 1 skips the vote adders: the
-    one-hot votes binary-encode directly (exactly one leaf fires). K > 1
-    builds a per-class popcount adder tree plus the argmax comparator chain,
-    first-max tie-breaking — bit-identical to `predict_votes`' `jnp.argmax`.
+    (the `SearchProblem` chromosome layout); `trunc` optionally truncates
+    each comparator's k lowest stages (DESIGN.md §16). K = 1 skips the vote
+    adders: the one-hot votes binary-encode directly (exactly one leaf
+    fires), and `vote_adder` is inert. K > 1 builds the vote stage selected
+    by `vote_adder`:
+
+      "exact"  per-class popcount adder tree — majority vote;
+      "approx" per-class saturating OR-tree (1-bit "did ANY tree vote c"),
+               the cross-layer paper's approximate vote adder.
+
+    Either way the argmax comparator chain keeps first-max tie-breaking —
+    bit-identical to `predict_votes`' `jnp.argmax` over (possibly
+    saturated) vote counts.
     """
+    if vote_adder not in ("exact", "approx"):
+        raise ValueError(f"unknown vote_adder {vote_adder!r}")
     if isinstance(ptrees, ParallelTree):
         ptrees = [ptrees]
     bits = np.asarray(bits)
     t_int = np.asarray(t_int)
+    trunc = (np.zeros_like(bits) if trunc is None else np.asarray(trunc))
     nb = NetlistBuilder()
     trees, off = [], 0
     for pt in ptrees:
         n = pt.n_comparators
         trees.append(build_tree_cells(nb, pt, bits[off:off + n],
-                                      t_int[off:off + n], n_classes))
+                                      t_int[off:off + n], n_classes,
+                                      trunc=trunc[off:off + n]))
         off += n
     if off != bits.shape[0]:
         raise ValueError(
@@ -363,14 +394,7 @@ def build_circuit(ptrees, bits, t_int, n_classes: int) -> Circuit:
         out = [nb.or_many([trees[0].votes[c] for c in range(n_classes)
                            if (c >> b) & 1]) for b in range(n_bits)]
     else:
-        counts = [nb.popcount([t.votes[c] for t in trees])
-                  for c in range(n_classes)]
-        best_cnt, best_idx = counts[0], nb.const_vec(0, n_bits)
-        for c in range(1, n_classes):
-            sel = nb.gt(counts[c], best_cnt)
-            best_cnt = nb.mux_vec(sel, counts[c], best_cnt)
-            best_idx = nb.mux_vec(sel, nb.const_vec(c, n_bits), best_idx)
-        out = best_idx
+        out = _vote_argmax(nb, trees, n_classes, approx=vote_adder == "approx")
     return Circuit(
         op=np.asarray(nb.op, np.int8),
         a=np.asarray(nb.a, np.int32),
@@ -379,6 +403,48 @@ def build_circuit(ptrees, bits, t_int, n_classes: int) -> Circuit:
         trees=trees,
         n_classes=int(n_classes),
     )
+
+
+def _vote_argmax(nb: NetlistBuilder, trees, n_classes: int,
+                 approx: bool) -> list:
+    """Forest vote stage: per-class counts + first-max argmax chain.
+
+    Exact mode counts votes with popcount adder trees; approx mode
+    saturates each class to the 1-bit OR of its votes (DESIGN.md §16) —
+    the argmax chain is shared, operating on 1-bit "counts"."""
+    n_bits = class_bits(n_classes)
+    if approx:
+        counts = [[nb.or_many([t.votes[c] for t in trees])]
+                  for c in range(n_classes)]
+    else:
+        counts = [nb.popcount([t.votes[c] for t in trees])
+                  for c in range(n_classes)]
+    best_cnt, best_idx = counts[0], nb.const_vec(0, n_bits)
+    for c in range(1, n_classes):
+        sel = nb.gt(counts[c], best_cnt)
+        best_cnt = nb.mux_vec(sel, counts[c], best_cnt)
+        best_idx = nb.mux_vec(sel, nb.const_vec(c, n_bits), best_idx)
+    return best_idx
+
+
+def vote_adder_gate_counts(n_trees: int, n_classes: int,
+                           approx: bool) -> tuple[int, int, int, int]:
+    """(n_and, n_or, n_not, n_xor) of an ISOLATED forest vote stage.
+
+    Builds the vote stage on free-standing input wires (one per
+    tree x class) and inventories its gates — the number `core.area.
+    vote_adder_units` prices, so the GA's vote-adder area quanta come from
+    the same lowering `build_circuit` emits. An isolated stage can't share
+    logic with tree cells, so (like the additive comparator LUT) this is
+    the pre-CSE estimate the netlist "actual" area is measured against.
+    """
+    nb = NetlistBuilder()
+    trees = [TreeCells([], [], [nb.input_bit(k, c) for c in range(n_classes)])
+             for k in range(n_trees)]
+    _vote_argmax(nb, trees, n_classes, approx=approx)
+    op = np.asarray(nb.op)
+    return (int((op == AND).sum()), int((op == OR).sum()),
+            int((op == NOT).sum()), int((op == XOR).sum()))
 
 
 # ---------------------------------------------------------------------------

@@ -25,6 +25,12 @@ MASTER_BITS = 8
 MIN_BITS = 2
 MAX_BITS = 8
 MARGIN = 5  # paper §IV: threshold substitution margin m in [-5, +5]
+# Cross-layer co-search (DESIGN.md §16): per-comparator LSB truncation depth
+# k in [0, MAX_TRUNC]. A k-truncated p-bit comparator ignores its k lowest
+# threshold/input bit stages, which is exactly an exact comparator of width
+# p - k compared against t' >> k.
+MAX_TRUNC = 2
+VOTE_ADDER_MODES = ("exact", "approx")
 
 
 def threshold_to_int(threshold, bits):
@@ -65,8 +71,49 @@ def decode_genes(genes):
 
 
 def exact_genes(n_comparators: int) -> np.ndarray:
-    """Chromosome encoding the exact 8-bit, zero-margin design."""
+    """Chromosome encoding the exact 8-bit, zero-margin design.
+
+    Historical 2-genes-per-comparator layout (paper Fig. 3a). The tree
+    search space now also carries approximation genes — use
+    `exact_tree_genes` / `decode_tree_genes` for the engine's layout
+    (DESIGN.md §16); this pair remains the precision/margin primitive the
+    MLP family mirrors at its own ranges.
+    """
     g = np.zeros(2 * n_comparators, dtype=np.float32)
     g[0::2] = 0.999  # precision -> 8 bits
     g[1::2] = 0.5    # margin -> 0  (floor(0.5 * 11) = 5 -> m = 0)
+    return g
+
+
+def decode_tree_genes(genes):
+    """Cross-layer tree genes [0,1]^(3N+1) -> (bits, margin, trunc, vote).
+
+    Gene layout (DESIGN.md §16): per comparator k, gene 3k is the precision,
+    gene 3k+1 the substitution margin (both decoded exactly as
+    `decode_genes`), and gene 3k+2 the LSB-truncation depth in
+    [0, MAX_TRUNC]. The final gene toggles the forest's vote adder:
+    floor(g*2) = 0 selects the exact popcount adder, 1 the approximate
+    saturating OR-tree. Returns int32 arrays (bits[N], margin[N], trunc[N])
+    and the int32 vote flag (shape = leading batch dims).
+    """
+    g = jnp.asarray(genes)
+    comp = g[..., :-1]
+    gp, gm, gt = comp[..., 0::3], comp[..., 1::3], comp[..., 2::3]
+    span_p = MAX_BITS - MIN_BITS + 1
+    bits = MIN_BITS + jnp.clip(jnp.floor(gp * span_p), 0, span_p - 1)
+    margin = -MARGIN + jnp.clip(jnp.floor(gm * (2 * MARGIN + 1)), 0, 2 * MARGIN)
+    span_t = MAX_TRUNC + 1
+    trunc = jnp.clip(jnp.floor(gt * span_t), 0, span_t - 1)
+    vote = jnp.clip(jnp.floor(g[..., -1] * 2), 0, 1)
+    return (bits.astype(jnp.int32), margin.astype(jnp.int32),
+            trunc.astype(jnp.int32), vote.astype(jnp.int32))
+
+
+def exact_tree_genes(n_comparators: int) -> np.ndarray:
+    """Chromosome for the exact design in the cross-layer layout (§16):
+    8 bits, zero margin, zero truncation, exact vote adder."""
+    g = np.zeros(3 * n_comparators + 1, dtype=np.float32)
+    g[0:-1:3] = 0.999  # precision -> 8 bits
+    g[1:-1:3] = 0.5    # margin -> 0
+    # trunc genes (2::3) and the vote gene (last) stay 0.0 -> exact cells
     return g

@@ -47,15 +47,19 @@ def emit_verilog(
     bits: np.ndarray,
     t_int: np.ndarray,
     module_name: str = "bespoke_dtree",
+    trunc=None,
 ) -> str:
     """Emit a bespoke Verilog module for one (approximate) tree.
 
-    bits/t_int: per-comparator precision and SUBSTITUTED integer threshold.
+    bits/t_int: per-comparator precision and SUBSTITUTED integer threshold;
+    trunc (optional) per-comparator LSB-truncation depths (DESIGN.md §16).
     Inputs are the 8-bit master codes of each used feature; comparators slice
-    their top `bits` bits (truncation = right shift, matching core.quant).
+    their top `bits - trunc` bits (truncation = right shift, matching
+    core.quant) and compare against `t_int >> trunc`.
     """
     nb = nl_mod.NetlistBuilder()
-    cells = nl_mod.build_tree_cells(nb, pt, bits, t_int, pt.n_classes)
+    cells = nl_mod.build_tree_cells(nb, pt, bits, t_int, pt.n_classes,
+                                    trunc=trunc)
     n_cls_bits = nl_mod.class_bits(pt.n_classes)
     used_features = sorted(set(int(f) for f in pt.feature))
     lines = [
@@ -75,32 +79,42 @@ def emit_verilog(
 
 
 def emit_forest_verilog(ptrees, bits, t_int, n_classes: int | None = None,
-                        module_name: str = "bespoke_forest") -> str:
+                        module_name: str = "bespoke_forest", trunc=None,
+                        vote_adder: str = "exact") -> str:
     """Emit a bespoke forest: per-tree vote modules + the majority-vote top.
 
     bits/t_int are CONCATENATED per-comparator arrays across the K trees
-    (the joint-chromosome layout of `SearchProblem`). Each tree module emits
-    its one-hot class vote (OR of its class's leaves); the top module sums
-    votes per class with an adder tree — §2's vote matmul in hardware — and
-    selects the argmax with first-max tie-breaking, exactly matching
-    `predict_votes` / the fused Pallas kernel (ties -> lowest class index).
+    (the joint-chromosome layout of `SearchProblem`); trunc optionally
+    truncates comparator LSB stages (DESIGN.md §16). Each tree module emits
+    its one-hot class vote (OR of its class's leaves); the top module scores
+    votes per class — `vote_adder="exact"` sums them with an adder tree
+    (§2's vote matmul in hardware), `"approx"` saturates each class to the
+    1-bit OR of its votes — and selects the argmax with first-max
+    tie-breaking, exactly matching `predict_votes` / the fused Pallas
+    kernel (ties -> lowest class index).
     """
+    if vote_adder not in ("exact", "approx"):
+        raise ValueError(f"unknown vote_adder {vote_adder!r}")
     if isinstance(ptrees, ParallelTree):
         ptrees = [ptrees]
     if n_classes is None:
         n_classes = max(pt.n_classes for pt in ptrees)
     bits = np.asarray(bits)
     t_int = np.asarray(t_int)
+    trunc = (np.zeros_like(bits) if trunc is None else np.asarray(trunc))
     n_trees = len(ptrees)
     n_cls_bits = nl_mod.class_bits(n_classes)
-    cnt_bits = max(1, n_trees.bit_length())   # counts reach K
+    approx_vote = vote_adder == "approx"
+    # exact counts reach K; the approximate OR-tree saturates at 1 bit
+    cnt_bits = 1 if approx_vote else max(1, n_trees.bit_length())
 
     nb = nl_mod.NetlistBuilder()
     all_cells, off = [], 0
     for pt in ptrees:
         n = pt.n_comparators
         all_cells.append(nl_mod.build_tree_cells(
-            nb, pt, bits[off:off + n], t_int[off:off + n], n_classes))
+            nb, pt, bits[off:off + n], t_int[off:off + n], n_classes,
+            trunc=trunc[off:off + n]))
         off += n
 
     lines = [
@@ -130,10 +144,18 @@ def emit_forest_verilog(ptrees, bits, t_int, n_classes: int | None = None,
         ports = ", ".join([f".x{f}(x{f})" for f in used] + [f".vote(vote{k})"])
         lines.append(f"  wire [{n_classes - 1}:0] vote{k};")
         lines.append(f"  {module_name}_tree{k} t{k} ({ports});")
-    lines.append("  // majority-vote adder tree (the vote matmul in hardware)")
-    for c in range(n_classes):
-        total = " + ".join(f"vote{k}[{c}]" for k in range(n_trees))
-        lines.append(f"  wire [{cnt_bits - 1}:0] cnt{c} = {total};")
+    if approx_vote:
+        lines.append("  // approximate vote adder: saturating OR-tree "
+                     "(DESIGN.md §16)")
+        for c in range(n_classes):
+            total = " | ".join(f"vote{k}[{c}]" for k in range(n_trees))
+            lines.append(f"  wire [{cnt_bits - 1}:0] cnt{c} = {total};")
+    else:
+        lines.append("  // majority-vote adder tree "
+                     "(the vote matmul in hardware)")
+        for c in range(n_classes):
+            total = " + ".join(f"vote{k}[{c}]" for k in range(n_trees))
+            lines.append(f"  wire [{cnt_bits - 1}:0] cnt{c} = {total};")
     lines.append("  // argmax chain, ties -> lowest class index")
     lines.append(f"  wire [{cnt_bits - 1}:0] best0 = cnt0;")
     lines.append(f"  wire [{n_cls_bits - 1}:0] idx0 = {n_cls_bits}'d0;")
@@ -193,13 +215,18 @@ def emit_circuit_verilog(circuit: nl_mod.Circuit,
 
 
 def emit_design(ptrees, bits, t_int, n_classes: int | None = None,
-                module_name: str | None = None) -> str:
+                module_name: str | None = None, trunc=None,
+                vote_adder: str = "exact") -> str:
     """One entry point: a single tree emits `emit_verilog`, K > 1 the forest
-    hierarchy. `bits`/`t_int` are concatenated per-comparator arrays."""
+    hierarchy. `bits`/`t_int` are concatenated per-comparator arrays;
+    `trunc`/`vote_adder` select the approximate cells (DESIGN.md §16 — the
+    vote mode is inert for a single tree, which has no vote stage)."""
     if isinstance(ptrees, ParallelTree):
         ptrees = [ptrees]
     if len(ptrees) == 1:
         return emit_verilog(ptrees[0], bits, t_int,
-                            module_name=module_name or "bespoke_dtree")
+                            module_name=module_name or "bespoke_dtree",
+                            trunc=trunc)
     return emit_forest_verilog(ptrees, bits, t_int, n_classes=n_classes,
-                               module_name=module_name or "bespoke_forest")
+                               module_name=module_name or "bespoke_forest",
+                               trunc=trunc, vote_adder=vote_adder)

@@ -13,6 +13,10 @@ A family owns five concerns:
   1. **Problem construction + genes** — `build_problem` binds a dataset to a
      family-specific problem object; `n_genes`/`exact_genes` define the
      real-coded [0, 1] chromosome and the exact (lossless) seed design.
+     The NSGA-II operators are gene-position-agnostic, so a family may
+     enlarge its gene space freely — the tree family's cross-layer
+     approximation layout (per-comparator precision/margin/truncation plus
+     a forest-level vote-adder gene) is DESIGN.md §16.
   2. **Fitness** — `make_fitness(problem, backend)` returns the population
      fitness `(P, n_genes) -> (P, 2)` for the `reference` (pure jnp) and
      `kernel` (fused Pallas route) backends. Both must agree bit-exactly:
@@ -53,10 +57,14 @@ class ClassifierFamily:
         raise NotImplementedError
 
     def n_genes(self, problem) -> int:
+        """Chromosome length for `problem` (trees: 3N+1, DESIGN.md §16)."""
         raise NotImplementedError
 
     def exact_genes(self, problem):
-        """(n_genes,) chromosome decoding to the exact (lossless) design."""
+        """(n_genes,) chromosome decoding to the exact (lossless) design —
+        for families with approximation genes (DESIGN.md §16) that means
+        every approximate cell switched OFF, so the seed prices and scores
+        identically to the pre-approximation exact design."""
         raise NotImplementedError
 
     def describe(self, problem) -> str:
@@ -84,13 +92,17 @@ class ClassifierFamily:
         raise NotImplementedError
 
     def padded_n_genes(self, dims: tuple) -> int:
+        """Chromosome length at padded bucket dims (DESIGN.md §11)."""
         raise NotImplementedError
 
     def padded_exact_genes(self, dims: tuple):
+        """Exact-design seed chromosome at padded dims (inert pad genes)."""
         raise NotImplementedError
 
     def unpad_genes(self, problem, genes, dims: tuple):
-        """Slice a padded population's real gene columns back out."""
+        """Map a padded population's gene columns back to `problem`'s real
+        layout. Not necessarily a prefix slice: layouts with trailing
+        design-level genes (DESIGN.md §16) must relocate them."""
         raise NotImplementedError
 
     def eval_cost(self, dims: tuple) -> float:

@@ -83,13 +83,20 @@ class TreeFamily(ClassifierFamily):
         return _sweep.population_objectives(padded, pop)
 
     def padded_n_genes(self, dims: tuple) -> int:
-        return 2 * dims[0]
+        # cross-layer layout (DESIGN.md §16): 3 genes per padded comparator
+        # slot + the trailing forest-level vote-adder gene
+        return 3 * dims[0] + 1
 
     def padded_exact_genes(self, dims: tuple):
-        return quant.exact_genes(dims[0])
+        return quant.exact_tree_genes(dims[0])
 
     def unpad_genes(self, problem, genes, dims: tuple):
-        return genes[:, :problem.n_genes]
+        # real columns are the first 3N comparator genes plus the LAST
+        # column (the vote gene sits at index 3*Np in the padded layout
+        # but at 3*N in the real one — DESIGN.md §16)
+        n_comp_genes = problem.n_genes - 1
+        return np.concatenate([genes[:, :n_comp_genes], genes[:, -1:]],
+                              axis=1)
 
     def eval_cost(self, dims: tuple) -> float:
         np_, lp, cp, fp, bp = dims
@@ -120,9 +127,10 @@ class TreeFamily(ClassifierFamily):
 
     def build_point_circuit(self, artifact, idx: int):
         from repro.core import netlist
-        bits, t_int = artifact.point_design(idx)
+        bits, t_int, trunc, vote_adder = artifact.point_design(idx)
         return netlist.build_circuit(artifact.ptrees(), bits, t_int,
-                                     artifact.n_classes)
+                                     artifact.n_classes, trunc=trunc,
+                                     vote_adder=vote_adder)
 
 
 FAMILY = TreeFamily()

@@ -48,7 +48,7 @@ LANES = 128
 
 
 def _kernel(xsel_ref, scale_ref, thr_ref, path_ref, target_ref, cls1h_ref,
-            y_ref, out_ref, votes_ref):
+            y_ref, vcap_ref, out_ref, votes_ref):
     # xsel_ref:   (block_b, N)           f32  hoisted gathered master codes
     # scale_ref:  (block_p, N)           f32  2^-(8-p) per comparator
     # thr_ref:    (block_p, N)           f32  substituted integer threshold t'
@@ -56,6 +56,8 @@ def _kernel(xsel_ref, scale_ref, thr_ref, path_ref, target_ref, cls1h_ref,
     # target_ref: (1, block_l)           f32  path_len - n_neg
     # cls1h_ref:  (block_l, C)           f32  leaf -> class one-hot
     # y_ref:      (1, block_b)           f32  labels (-1 on padded rows)
+    # vcap_ref:   (block_p, LANES)       f32  lane-replicated vote caps
+    #                                         (1.0 approx adder, +inf exact)
     # out_ref:    (block_p, LANES)       f32  lane-replicated correct counts
     # votes_ref:  (block_p, block_b, C)  f32  VMEM vote accumulator
     x = xsel_ref[...]
@@ -89,6 +91,9 @@ def _kernel(xsel_ref, scale_ref, thr_ref, path_ref, target_ref, cls1h_ref,
     @pl.when(l_idx == pl.num_programs(2) - 1)
     def _reduce():
         v = votes_ref[...]                                 # (bp, bb, C)
+        # saturating (approximate) vote adder, DESIGN.md §16: clip the
+        # accumulated counts to the per-chromosome cap (+inf = exact no-op)
+        v = jnp.minimum(v, vcap_ref[...][:, :1][:, :, None])
         n_cls = v.shape[-1]
         vmax = jnp.max(v, axis=-1, keepdims=True)
         cls = jax.lax.broadcasted_iota(jnp.float32, v.shape, 2)
@@ -110,6 +115,7 @@ def fitness_errors(
     target,   # (1, L)  f32
     cls1h,    # (L, C)  f32
     y,        # (1, B)  f32 labels, -1 on padded batch rows
+    vote_cap,  # (P, LANES) f32 lane-replicated vote caps (+inf = exact)
     *,
     block_p: int = 8,
     block_b: int = 256,
@@ -147,6 +153,7 @@ def fitness_errors(
             pl.BlockSpec((1, block_l), lambda p, i, j: (0, j)),
             pl.BlockSpec((block_l, c), lambda p, i, j: (j, 0)),
             pl.BlockSpec((1, block_b), lambda p, i, j: (0, i)),
+            pl.BlockSpec((block_p, LANES), lambda p, i, j: (p, 0)),
         ],
         out_specs=pl.BlockSpec((block_p, LANES), lambda p, i, j: (p, 0)),
         out_shape=jax.ShapeDtypeStruct((n_pop, LANES), jnp.float32),
@@ -155,4 +162,4 @@ def fitness_errors(
             dimension_semantics=("parallel", "arbitrary", "arbitrary"),
         ),
         interpret=interpret,
-    )(x_sel, scale, thr, path_t, target, cls1h, y)
+    )(x_sel, scale, thr, path_t, target, cls1h, y, vote_cap)

@@ -101,39 +101,52 @@ def prepare_tree_operands(pt: ParallelTree, n_features: int):
 def decode_population_full(threshold, genes):
     """ONE gene decode shared by the accuracy and area terms (DESIGN.md §12).
 
-    threshold (N,) float; genes (P, 2N). Returns (scale, t_sub, bits), all
-    (P, N): the comparator shift scales (f32), the substituted integer
-    thresholds (int32 — index the area LUT directly, cast to f32 for the
-    kernel), and the decoded precisions (int32). Historically the kernel
-    fitness decoded twice — once for scale/thr, once more for the area LUT
-    index — doubling the per-chromosome decode work.
+    threshold (N,) float; genes (P, 3N+1) in the cross-layer layout
+    (DESIGN.md §16). Returns (scale, t_sub, bits, vote_cap): scale/t_sub/
+    bits are (P, N) EFFECTIVE comparator operands with LSB truncation
+    already folded in — width p - k, threshold t' >> k, shift scale
+    2^-(8-p+k) — because a k-truncated comparator IS the exact comparator
+    at that width, so the kernel compare needs no new op. `t_sub` (int32)
+    indexes the area LUT directly (cast to f32 for the kernel); `vote_cap`
+    (P,) f32 is the vote saturation (1.0 approx adder, +inf exact — an
+    exact f32 no-op). Historically the kernel fitness decoded twice — once
+    for scale/thr, once more for the area LUT index — doubling the
+    per-chromosome decode work.
     """
-    bits, margin = quant.decode_genes(genes)                  # (P, N) each
+    bits, margin, trunc, vote = quant.decode_tree_genes(genes)  # (P, N) each
     t_int = quant.threshold_to_int(threshold[None, :], bits)
     t_sub = quant.substitute(t_int, margin, bits)
-    scale = jnp.exp2(-(8 - bits).astype(jnp.float32))
-    return scale, t_sub, bits
+    bits_eff = bits - trunc
+    t_eff = jnp.right_shift(t_sub, trunc)
+    scale = jnp.exp2(-(8 - bits_eff).astype(jnp.float32))
+    vote_cap = jnp.where(vote > 0, jnp.float32(1.0), jnp.float32(jnp.inf))
+    return scale, t_eff, bits_eff, vote_cap
 
 
 def decode_population(threshold, genes):
     """Per-chromosome kernel operands from real-coded genes.
 
-    threshold (N,) float; genes (P, 2N). Returns scale (P, N), thr (P, N) f32.
+    threshold (N,) float; genes (P, 3N+1). Returns scale (P, N), thr (P, N)
+    f32 (effective, truncation folded in) and vote_cap (P,) f32.
     """
-    scale, t_sub, _ = decode_population_full(threshold, genes)
-    return scale, t_sub.astype(jnp.float32)
+    scale, t_sub, _, vote_cap = decode_population_full(threshold, genes)
+    return scale, t_sub.astype(jnp.float32), vote_cap
 
 
 @functools.partial(jax.jit, static_argnames=("block_b", "block_l", "interpret"))
-def tree_infer_predict(x8, pt_operands, scale, thr, *, block_b=256,
-                       block_l=None, interpret=None):
+def tree_infer_predict(x8, pt_operands, scale, thr, vote_cap=None, *,
+                       block_b=256, block_l=None, interpret=None):
     """(P, B) predicted classes for a population of approximate trees/forests.
 
     x8 (B, F) int; pt_operands from prepare_tree_operands /
-    prepare_forest_operands (already padded); scale/thr (P, N_padded-able).
-    For forest operands the returned class is the majority vote over trees
-    (ties -> lowest class index, matching `forest_predict`). ``block_l``
-    tiles the concatenated leaf axis for large forests.
+    prepare_forest_operands (already padded); scale/thr (P, N_padded-able);
+    vote_cap (P,) f32 optional vote saturation (DESIGN.md §16) — the
+    materialized class scores are clipped to it before argmax, modeling the
+    approximate OR-tree vote adder (+inf rows are an exact no-op).
+    For forest operands the returned class is the (possibly saturated)
+    majority vote over trees (ties -> lowest class index, matching
+    `forest_predict`). ``block_l`` tiles the concatenated leaf axis for
+    large forests.
     """
     interpret = _auto_interpret() if interpret is None else interpret
     sel, path_t, target, cls1h = pt_operands
@@ -149,7 +162,10 @@ def tree_infer_predict(x8, pt_operands, scale, thr, *, block_b=256,
         x8f, sel, scale, thr, path_t, target, cls1h,
         block_b=block_b, block_l=block_l, interpret=interpret,
     )
-    return jnp.argmax(scores[:, : x8.shape[0], :], axis=-1)
+    scores = scores[:, : x8.shape[0], :]
+    if vote_cap is not None:
+        scores = jnp.minimum(scores, vote_cap[:, None, None])
+    return jnp.argmax(scores, axis=-1)
 
 
 def _fit_block_l(l_pad: int, block_l: int) -> int:
@@ -166,19 +182,31 @@ def _fit_block_l(l_pad: int, block_l: int) -> int:
 # serving (DESIGN.md §14)
 # ---------------------------------------------------------------------------
 
-def prepare_design(bits, t_int):
+def prepare_design(bits, t_int, trunc=None, vote_adder: str = "exact"):
     """Fixed-design kernel operands from a decoded pareto point.
 
     ``bits``/``t_int`` are one design's per-comparator precisions and
     substituted integer thresholds (e.g. a `pareto.json` point's `bits` /
     `t_int` arrays) — the already-decoded form, so serving never re-rounds
-    genes. Returns (scale, thr), both (1, N) f32: the P=1 row the
+    genes. ``trunc``/``vote_adder`` select the point's approximate cells
+    (DESIGN.md §16); truncation is folded into the effective scale/thr
+    exactly as `decode_population_full` does. Returns (scale, thr,
+    vote_cap): scale/thr (1, N) f32, vote_cap (1,) f32 — the P=1 row the
     population kernels consume.
     """
+    if vote_adder not in ("exact", "approx"):
+        raise ValueError(f"unknown vote_adder {vote_adder!r}")
     bits = jnp.asarray(bits, jnp.int32)
+    t_int = jnp.asarray(t_int, jnp.int32)
+    if trunc is not None:
+        k = jnp.asarray(trunc, jnp.int32)
+        bits = bits - k
+        t_int = jnp.right_shift(t_int, k)
     scale = jnp.exp2(-(quant.MASTER_BITS - bits).astype(jnp.float32))[None, :]
-    thr = jnp.asarray(t_int, jnp.float32)[None, :]
-    return scale, thr
+    thr = t_int.astype(jnp.float32)[None, :]
+    cap = jnp.full((1,), 1.0 if vote_adder == "approx" else jnp.inf,
+                   jnp.float32)
+    return scale, thr, cap
 
 
 def classify(x8, pt_operands, design, *, block_b=256, block_l=None,
@@ -189,12 +217,14 @@ def classify(x8, pt_operands, design, *, block_b=256, block_l=None,
     `tree_infer_predict` over the same prepared operands, so a served
     prediction runs the exact tensor program the search scored — and the
     netlist simulator stays its bit-exact oracle. ``design`` comes from
-    `prepare_design`; ``x8`` is (B, F) int master codes with B at any
+    `prepare_design` (including the point's truncation/vote-adder
+    approximation config); ``x8`` is (B, F) int master codes with B at any
     bucket size (the kernel pads the batch axis to ``block_b`` internally).
     """
-    scale, thr = design
-    return tree_infer_predict(x8, pt_operands, scale, thr, block_b=block_b,
-                              block_l=block_l, interpret=interpret)[0]
+    scale, thr, vote_cap = design
+    return tree_infer_predict(x8, pt_operands, scale, thr, vote_cap,
+                              block_b=block_b, block_l=block_l,
+                              interpret=interpret)[0]
 
 
 # ---------------------------------------------------------------------------
@@ -241,13 +271,16 @@ def prepare_fitness_operands(x_sel, y, path, path_len, n_neg,
 @functools.partial(
     jax.jit, static_argnames=("block_p", "block_b", "block_l", "interpret")
 )
-def fitness_errors(fit_operands, scale, thr, *, block_p=8, block_b=256,
-                   block_l=None, interpret=None):
+def fitness_errors(fit_operands, scale, thr, vote_cap=None, *, block_p=8,
+                   block_b=256, block_l=None, interpret=None):
     """(P,) misclassified-sample counts for a population of trees/forests.
 
     `fit_operands` from `prepare_fitness_operands` (N/L/C already padded);
-    scale/thr (P, N-padded-able) f32. Handles ragged edges internally: the
-    batch axis pads to ``block_b`` with label -1 rows (never counted
+    scale/thr (P, N-padded-able) f32; vote_cap (P,) f32 optional vote
+    saturation (DESIGN.md §16) — the kernel clips the accumulated class
+    votes to it before the on-chip argmax (+inf rows are an exact no-op,
+    so omitting it IS the exact adder). Handles ragged edges internally:
+    the batch axis pads to ``block_b`` with label -1 rows (never counted
     correct), the population axis pads to ``block_p`` with inert rows that
     are cropped from the result. One kernel launch computes the whole
     population x test-set x forest product and writes only the O(P)
@@ -264,10 +297,16 @@ def fitness_errors(fit_operands, scale, thr, *, block_p=8, block_b=256,
     # padded comparators / chromosomes must never fire: thr pad = 256 > x_p
     thr_p = _pad_to(_pad_to(thr, n, 1, value=256.0)[:, :n],
                     block_p, 0, value=256.0)
+    if vote_cap is None:
+        vote_cap = jnp.full((n_pop,), jnp.inf, jnp.float32)
+    # lane-replicated (P, LANES) tile; pad rows get the exact +inf cap
+    vcap_p = _pad_to(jnp.broadcast_to(vote_cap[:, None].astype(jnp.float32),
+                                      (n_pop, _fit.LANES)),
+                     block_p, 0, value=jnp.inf)
     if block_l is not None:
         block_l = _fit_block_l(path_t.shape[1], block_l)
     counts = _fit.fitness_errors(
-        x_sel_p, scale_p, thr_p, path_t, target, cls1h, y_p,
+        x_sel_p, scale_p, thr_p, path_t, target, cls1h, y_p, vcap_p,
         block_p=block_p, block_b=block_b, block_l=block_l,
         interpret=interpret,
     )

@@ -19,11 +19,14 @@ def tree_infer_scores(x8f, sel, scale, thr, path_t, target, cls1h):
     return jnp.einsum("pbl,lc->pbc", sat, cls1h)
 
 
-def fitness_correct_counts(x_sel, scale, thr, path_t, target, cls1h, y):
+def fitness_correct_counts(x_sel, scale, thr, path_t, target, cls1h, y,
+                           vote_cap=None):
     """Oracle for kernels.fitness.fitness_errors. Same padded operands.
 
     x_sel (B, N) f32 hoisted gathered codes; scale/thr (P, N); path_t (N, L);
-    target (1, L); cls1h (L, C); y (1, B) f32 labels (-1 on padded rows).
+    target (1, L); cls1h (L, C); y (1, B) f32 labels (-1 on padded rows);
+    vote_cap (P,) f32 optional vote saturation (DESIGN.md §16; +inf rows are
+    an exact no-op, matching the kernel's lane-replicated cap operand).
     Returns (P,) f32 correct-sample counts (the kernel's lane-replicated
     accumulator collapsed to one lane).
     """
@@ -32,6 +35,8 @@ def fitness_correct_counts(x_sel, scale, thr, path_t, target, cls1h, y):
     score = jnp.einsum("pbn,nl->pbl", d, path_t)
     sat = (score == target[None]).astype(jnp.float32)
     votes = jnp.einsum("pbl,lc->pbc", sat, cls1h)
+    if vote_cap is not None:
+        votes = jnp.minimum(votes, vote_cap[:, None, None])
     pred = jnp.argmax(votes, axis=-1).astype(jnp.float32)  # (P, B)
     return jnp.sum((pred == y).astype(jnp.float32), axis=-1)
 

@@ -86,7 +86,14 @@ class ClassifyServer:
         `search.problem_ptrees(problem)`).
     bits, t_int : (N,) int arrays
         The decoded design — per-comparator precisions and substituted
-        integer thresholds — concatenated across trees in `ptrees` order.
+        integer thresholds (both PRE-truncation) — concatenated across
+        trees in `ptrees` order.
+    trunc : (N,) int array | None
+        Per-comparator truncated-LSB counts (DESIGN.md §16); None = all
+        exact. Folded into effective operands exactly as the search's
+        fitness path and the netlist lowering do.
+    vote_adder : "exact" (popcount vote adder) or "approx" (saturating
+        OR-tree, DESIGN.md §16). Inert for single trees.
     n_classes : int
     n_features : int | None
         Feature-vector width; defaults to the widest feature index any
@@ -102,7 +109,8 @@ class ClassifyServer:
     """
 
     def __init__(self, ptrees, bits, t_int, n_classes: int,
-                 n_features: int | None = None, *, backend: str = "kernel",
+                 n_features: int | None = None, *, trunc=None,
+                 vote_adder: str = "exact", backend: str = "kernel",
                  max_batch: int = 1024, granule: int = GRANULE,
                  interpret: bool | None = None, donate: bool | None = None):
         if backend not in BACKENDS:
@@ -110,17 +118,30 @@ class ClassifyServer:
                 f"unknown serving backend {backend!r}; options: {BACKENDS}")
         if max_batch < granule:
             raise ValueError(f"max_batch={max_batch} < granule={granule}")
+        if vote_adder not in quant.VOTE_ADDER_MODES:
+            raise ValueError(
+                f"unknown vote_adder {vote_adder!r}; "
+                f"options: {quant.VOTE_ADDER_MODES}")
         arrays = concatenate_ptrees(ptrees)
         self.feature = np.asarray(arrays["feature"], np.int32)
         n = self.feature.shape[0]
         bits = np.asarray(bits, np.int32)
         t_int = np.asarray(t_int, np.int32)
-        if bits.shape != (n,) or t_int.shape != (n,):
+        trunc = (np.zeros(n, np.int32) if trunc is None
+                 else np.asarray(trunc, np.int32))
+        if bits.shape != (n,) or t_int.shape != (n,) or trunc.shape != (n,):
             raise ValueError(
-                f"design arrays bits{bits.shape}/t_int{t_int.shape} do not "
-                f"match the ensemble's {n} comparators")
+                f"design arrays bits{bits.shape}/t_int{t_int.shape}/"
+                f"trunc{trunc.shape} do not match the ensemble's "
+                f"{n} comparators")
+        if n and (trunc.min() < 0 or trunc.max() > quant.MAX_TRUNC):
+            raise ValueError(
+                f"trunc values must lie in [0, {quant.MAX_TRUNC}], got "
+                f"range [{trunc.min()}, {trunc.max()}]")
         self.bits = bits
         self.t_int = t_int
+        self.trunc = trunc
+        self.vote_adder = vote_adder
         self.n_classes = int(n_classes)
         self.n_features = int(n_features) if n_features is not None else (
             int(self.feature.max()) + 1 if n else 1)
@@ -138,16 +159,21 @@ class ClassifyServer:
         # design + operands are built ONCE; every bucket's step closes over
         # the same device arrays (the chromosome-invariant prep of §12,
         # specialised to a single fixed design)
-        self._design = kops.prepare_design(bits, t_int)
+        self._design = kops.prepare_design(bits, t_int, trunc=trunc,
+                                           vote_adder=vote_adder)
         self._operands = kops.prepare_operands(
             arrays["feature"], arrays["path"], arrays["path_len"],
             arrays["n_neg"], arrays["leaf_class"], self.n_classes,
             self.n_features)
-        # reference-backend operands (the predict_votes dataflow)
+        # reference-backend operands (the predict_votes dataflow) —
+        # EFFECTIVE values: truncation folded into precision/threshold,
+        # vote cap 1.0 for the approximate adder (DESIGN.md §16)
         self._ref = dict(
             feature=jnp.asarray(self.feature),
-            bits=jnp.asarray(bits),
-            t_int=jnp.asarray(t_int),
+            bits=jnp.asarray(bits - trunc),
+            t_int=jnp.asarray(t_int >> trunc),
+            vote_cap=jnp.float32(
+                1.0 if vote_adder == "approx" else np.inf),
             path_t=jnp.asarray(np.asarray(arrays["path"]).T
                                .astype(np.float32)),
             target=jnp.asarray((np.asarray(arrays["path_len"])
@@ -255,9 +281,9 @@ class ClassifyServer:
             server = cls.for_mlp(w1, w2, artifact.shift, artifact.n_classes,
                                  artifact.n_features, **opts)
         else:
-            bits, t_int = artifact.point_design(idx)
+            bits, t_int, trunc, vote_adder = artifact.point_design(idx)
             server = cls(artifact.ptrees(), bits, t_int, artifact.n_classes,
-                         **opts)
+                         trunc=trunc, vote_adder=vote_adder, **opts)
         server.artifact = artifact
         server.point_index = idx
         return server
@@ -379,6 +405,8 @@ class ClassifyServer:
         score = d @ r["path_t"]
         sat = (score == r["target"][None, :]).astype(jnp.float32)
         votes = sat @ r["cls1h"]
+        # saturating (approximate) vote adder: +inf cap = exact f32 no-op
+        votes = jnp.minimum(votes, r["vote_cap"])
         return jnp.argmax(votes, axis=1).astype(jnp.int32)
 
     def _build_step(self, bucket: int):

@@ -303,8 +303,8 @@ def main(argv=None) -> None:
                          "printed MLPs")
     ap.add_argument("--trees", type=int, default=1,
                     help="tree family: 1 = single bespoke DT; K>1 = "
-                         "bootstrap forest with a joint 2*sum(N_k)-gene "
-                         "chromosome")
+                         "bootstrap forest with a joint 3*sum(N_k)+1-gene "
+                         "chromosome (DESIGN.md §16)")
     ap.add_argument("--hidden", type=int, default=16,
                     help="mlp family: hidden-layer width")
     ap.add_argument("--backend", default="reference",
@@ -414,12 +414,18 @@ def main(argv=None) -> None:
                 verilog = rtl.emit_circuit_verilog(
                     circuit, module_name=f"printed_mlp_{args.dataset}")
             else:
-                bits, t_int = search.decode_chromosome(problem,
-                                                       jnp.asarray(genes))
+                # effective (post-truncation) design: lowering it with
+                # trunc=None is identical to lowering the pre-truncation
+                # design with its trunc vector (DESIGN.md §16)
+                bits, t_int, vote_cap = search.decode_chromosome(
+                    problem, jnp.asarray(genes))
+                vote_adder = ("approx" if np.isfinite(float(vote_cap))
+                              else "exact")
                 verilog = rtl.emit_design(search.problem_ptrees(problem),
                                           np.asarray(bits),
                                           np.asarray(t_int),
-                                          problem.n_classes)
+                                          problem.n_classes,
+                                          vote_adder=vote_adder)
             path = os.path.join(args.out, f"bespoke_{args.dataset}.v")
             with open(path, "w") as f:
                 f.write(verilog)

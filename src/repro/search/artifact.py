@@ -13,9 +13,14 @@ layout (`path`, `path_len`, `n_neg`, `leaf_class`, per-tree
 `tree_comparators`/`tree_leaves`), so `ParetoArtifact.ptrees()` rebuilds
 the per-tree `ParallelTree`s — and from there the gate-level netlist, RTL,
 or a `ClassifyServer` — from the JSON alone, no dataset or training run
-required. Each pareto point stores the *decoded* design (`bits` + the
-substituted integer thresholds `t_int`), sidestepping the rounded `genes`
-entirely: re-serving a point reproduces its recorded accuracy bit-exactly.
+required. Each pareto point stores the *decoded* design — pre-truncation
+`bits` + substituted integer thresholds `t_int`, plus the cross-layer
+approximation config of DESIGN.md §16: per-comparator `trunc` LSB-drop
+counts and the forest-level `vote_adder` mode — sidestepping the rounded
+`genes` entirely: re-serving a point reproduces its recorded accuracy
+bit-exactly. `trunc`/`vote_adder` values are validated on write AND load
+(range [0, MAX_TRUNC], mode in VOTE_ADDER_MODES) with named `ValueError`s,
+same as the key sets.
 """
 from __future__ import annotations
 
@@ -40,7 +45,8 @@ REQUIRED_TOP_KEYS = frozenset({
 OPTIONAL_TOP_KEYS = frozenset({"dataset", "family"})
 REQUIRED_POINT_KEYS = frozenset({
     "acc_loss", "norm_area", "area_mm2", "area_netlist_mm2",
-    "netlist_gates", "bits", "margin", "t_int", "genes",
+    "netlist_gates", "bits", "margin", "t_int", "trunc", "vote_adder",
+    "genes",
 })
 OPTIONAL_POINT_KEYS = frozenset({"rtl", "verified"})
 
@@ -115,12 +121,25 @@ def validate_payload(payload: dict, where: str = "payload") -> dict:
             raise ValueError(
                 f"pareto artifact {where}: {key!r} has {len(payload[key])} "
                 f"entries, expected {l} leaves")
+    from repro.core import quant
+
     for i, point in enumerate(points):
-        for key in ("bits", "margin", "t_int"):
+        for key in ("bits", "margin", "t_int", "trunc"):
             if len(point[key]) != n:
                 raise ValueError(
                     f"pareto artifact {where}: pareto[{i}].{key} has "
                     f"{len(point[key])} entries, expected n_comparators={n}")
+        bad_trunc = [t for t in point["trunc"]
+                     if not (isinstance(t, int)
+                             and 0 <= t <= quant.MAX_TRUNC)]
+        if bad_trunc:
+            raise ValueError(
+                f"pareto artifact {where}: pareto[{i}].trunc entries "
+                f"{bad_trunc} out of range [0, {quant.MAX_TRUNC}]")
+        if point["vote_adder"] not in quant.VOTE_ADDER_MODES:
+            raise ValueError(
+                f"pareto artifact {where}: pareto[{i}].vote_adder "
+                f"{point['vote_adder']!r} not in {quant.VOTE_ADDER_MODES}")
     return payload
 
 
@@ -159,11 +178,17 @@ class ParetoArtifact:
     def n_leaves(self) -> int:
         return int(self.leaf_class.shape[0])
 
-    def point_design(self, i: int) -> tuple[np.ndarray, np.ndarray]:
-        """Pareto point `i`'s decoded design: (bits, t_int), both (N,) int."""
+    def point_design(self, i: int):
+        """Pareto point `i`'s decoded design (DESIGN.md §14, §16):
+        (bits, t_int, trunc, vote_adder) — `bits`/`t_int`/`trunc` are (N,)
+        int arrays with pre-truncation precision/thresholds, `vote_adder`
+        is "exact" or "approx". Consumers fold `trunc` into effective
+        operands (`kernels.ops.prepare_design`, `netlist.build_circuit`)."""
         point = self.points[i]
         return (np.asarray(point["bits"], np.int32),
-                np.asarray(point["t_int"], np.int32))
+                np.asarray(point["t_int"], np.int32),
+                np.asarray(point["trunc"], np.int32),
+                str(point["vote_adder"]))
 
     def point_accuracy(self, i: int) -> float:
         """The accuracy this point scored on the search's test split."""

@@ -1,6 +1,7 @@
 """Pluggable fitness backends over a `SearchProblem` (DESIGN.md §7, §12).
 
-Every backend maps a population of real-coded genes (P, 2N) to objectives
+Every backend maps a population of real-coded genes (P, n_genes) — for
+trees the cross-layer (P, 3N+1) layout of DESIGN.md §16 — to objectives
 (P, 2) = (accuracy loss vs exact design, normalized area), bit-compatible
 with each other:
 
@@ -44,7 +45,7 @@ BACKENDS = ("reference", "kernel", "islands")
 
 
 def make_reference_fitness(problem: SearchProblem):
-    """Population fitness: (P, 2N) genes -> (P, 2) objectives, jitted."""
+    """Population fitness: (P, n_genes) genes -> (P, 2) objectives, jitted."""
 
     @jax.jit
     def fitness(pop):
@@ -79,15 +80,21 @@ def make_kernel_fitness(problem: SearchProblem, *, block_p: int = 8,
     @jax.jit
     def fitness(pop):
         # ONE decode feeds the kernel operands AND the area LUT index
-        # (historically this decoded twice per eval).
-        scale, t_sub, bits = kops.decode_population_full(threshold, pop)
+        # (historically this decoded twice per eval). Truncation is already
+        # folded into the effective (scale, t_sub, bits) and the vote cap
+        # rides into the kernel's on-chip argmax (DESIGN.md §16).
+        scale, t_sub, bits, vote_cap = kops.decode_population_full(
+            threshold, pop)
         errors = kops.fitness_errors(
-            fit_operands, scale, t_sub.astype(jnp.float32),
+            fit_operands, scale, t_sub.astype(jnp.float32), vote_cap,
             block_p=block_p, block_b=block_b, block_l=block_l,
             interpret=interpret)
         acc = (n_samples - errors) / n_samples
         areas = problem.area_lut[problem.lut_offsets[bits] + t_sub].sum(axis=1)
         areas = areas + problem.overhead_mm2
+        areas = areas + jnp.where(jnp.isfinite(vote_cap),
+                                  jnp.float32(problem.vote_mm2_approx),
+                                  jnp.float32(problem.vote_mm2_exact))
         return jnp.stack(
             [problem.exact_accuracy - acc, areas / problem.exact_area_mm2],
             axis=1,

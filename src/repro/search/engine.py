@@ -80,7 +80,7 @@ class SearchConfig:
 class SearchResult:
     state: nsga2.NSGA2State
     pareto_objs: np.ndarray    # (K, 2) accuracy-loss / normalized-area
-    pareto_genes: np.ndarray   # (K, 2N)
+    pareto_genes: np.ndarray   # (K, 3N+1) — DESIGN.md §16 gene layout
     backend: str
     wall_s: float
     n_evaluations: int
@@ -417,8 +417,10 @@ def run_search(problem: SearchProblem, cfg: SearchConfig | None = None,
 
 
 def _make_kernel_predict(problem: SearchProblem):
-    """Single-chromosome (2N,) -> (B,) predictions through the Pallas path —
-    the third leg of the RTL verification triangle (DESIGN.md §10)."""
+    """Single-chromosome (3N+1,) -> (B,) predictions through the Pallas path —
+    the third leg of the RTL verification triangle (DESIGN.md §10). The
+    decode folds comparator truncation into the effective operands and the
+    vote cap models the approximate vote adder (DESIGN.md §16)."""
     from repro.kernels import ops as kops
 
     operands = kops.prepare_operands(
@@ -426,8 +428,10 @@ def _make_kernel_predict(problem: SearchProblem):
         problem.leaf_class, problem.n_classes, problem.n_features)
 
     def predict(genes):
-        scale, thr = kops.decode_population(problem.threshold, genes[None, :])
-        return kops.tree_infer_predict(problem.x8, operands, scale, thr)[0]
+        scale, thr, vote_cap = kops.decode_population(
+            problem.threshold, genes[None, :])
+        return kops.tree_infer_predict(problem.x8, operands, scale, thr,
+                                       vote_cap)[0]
 
     return predict
 
@@ -447,10 +451,12 @@ def write_pareto_artifact(problem: SearchProblem, result: SearchResult,
     """pareto.json: objectives + genes + decoded designs + hardware artifact.
 
     Every point records the decoded `bits`/`margin` AND the substituted
-    integer thresholds `t_int` (plus the top-level trained float `threshold`
-    array AND the full super-tree leaf layout — `path`, `path_len`, `n_neg`,
-    `leaf_class`), so a design re-materializes into RTL or a serving runtime
-    from the artifact alone (`search.load_pareto_artifact`, DESIGN.md §14);
+    integer thresholds `t_int` — both PRE-truncation — plus the per-comparator
+    `trunc` LSB-drop counts and the `vote_adder` mode (DESIGN.md §16), the
+    top-level trained float `threshold` array AND the full super-tree leaf
+    layout (`path`, `path_len`, `n_neg`, `leaf_class`), so a design
+    re-materializes into RTL or a serving runtime from the artifact alone
+    (`search.load_pareto_artifact`, DESIGN.md §14);
     the additive-LUT `area_mm2` estimate is paired with the
     synthesized-netlist `area_netlist_mm2` (gate counts after CSE/constant
     propagation) — the paper's Fig. 5 estimated-vs-actual gap as a measured
@@ -475,13 +481,16 @@ def write_pareto_artifact(problem: SearchProblem, result: SearchResult,
     points = []
     for i, (o, g) in enumerate(zip(result.pareto_objs, result.pareto_genes)):
         g_j = jnp.asarray(g)
-        bits_j, margin = quant.decode_genes(g_j)
+        bits_j, margin, trunc_j, vote_j = quant.decode_tree_genes(g_j)
         t_sub_j = quant.substitute(
             quant.threshold_to_int(problem.threshold, bits_j), margin, bits_j)
         bits = np.asarray(bits_j)
         t_sub = np.asarray(t_sub_j)
+        trunc = np.asarray(trunc_j)
+        vote_adder = "approx" if int(vote_j) else "exact"
         circuit = netlist.build_circuit(ptrees, bits, t_sub,
-                                        problem.n_classes)
+                                        problem.n_classes, trunc=trunc,
+                                        vote_adder=vote_adder)
         point = {
             "acc_loss": float(o[0]),
             "norm_area": float(o[1]),
@@ -491,17 +500,24 @@ def write_pareto_artifact(problem: SearchProblem, result: SearchResult,
             "bits": bits.tolist(),
             "margin": np.asarray(margin).tolist(),
             "t_int": t_sub.tolist(),
+            "trunc": trunc.tolist(),
+            "vote_adder": vote_adder,
             "genes": np.asarray(g, np.float64).round(6).tolist(),
         }
         if emit_rtl:
-            verilog = rtl.emit_design(ptrees, bits, t_sub, problem.n_classes)
+            verilog = rtl.emit_design(ptrees, bits, t_sub, problem.n_classes,
+                                      trunc=trunc, vote_adder=vote_adder)
             rel = os.path.join("rtl", f"point_{i:02d}.v")
             with open(os.path.join(out_dir, rel), "w") as f:
                 f.write(verilog)
             point["rtl"] = rel
         if verify_rtl:
+            vote_cap = jnp.where(vote_j > 0, jnp.float32(1.0),
+                                 jnp.float32(jnp.inf))
             sim = np.asarray(netlist.simulate(circuit, problem.x8))
-            ref = np.asarray(predict_votes(problem, bits_j, t_sub_j))
+            ref = np.asarray(predict_votes(
+                problem, bits_j - trunc_j, jnp.right_shift(t_sub_j, trunc_j),
+                vote_cap))
             ker = np.asarray(kernel_predict(g_j))
             if not (np.array_equal(sim, ref) and np.array_equal(sim, ker)):
                 n_ref = int((sim != ref).sum())

@@ -8,8 +8,10 @@ forest in `core.forest`, islands in `core.dist`). This module collapses the
 *data* side of all three into one immutable problem object (DESIGN.md §7):
 
   - the comparator axis is the concatenation of every tree's comparators
-    (a single tree is the K=1 case), so one chromosome of 2*N_total genes
-    covers the whole ensemble exactly like `core.forest`'s joint search;
+    (a single tree is the K=1 case), so one chromosome of 3*N_total + 1
+    genes — per-comparator (precision, margin, truncation) plus the
+    forest-wide vote-adder gene (DESIGN.md §16) — covers the whole ensemble
+    exactly like `core.forest`'s joint search;
   - the leaf axis concatenates every tree's leaves and `path` is the
     block-diagonal "super-tree" path matrix, so leaf decode + the class-vote
     matmul evaluate every tree in one fused tensor program — the same
@@ -64,6 +66,8 @@ class SearchProblem:
     n_trees: int
     tree_comparators: tuple   # per-tree comparator counts (static)
     tree_leaves: tuple        # per-tree leaf counts (static)
+    vote_mm2_exact: float = 0.0   # vote-stage area per adder mode — priced
+    vote_mm2_approx: float = 0.0  # from the netlist harness (DESIGN.md §16)
 
     @property
     def n_comparators(self) -> int:
@@ -75,11 +79,14 @@ class SearchProblem:
 
     @property
     def n_genes(self) -> int:
-        return 2 * self.n_comparators
+        """Cross-layer chromosome length (DESIGN.md §16): three genes per
+        comparator (precision, margin, truncation) + the vote-adder gene."""
+        return 3 * self.n_comparators + 1
 
     def exact_genes(self) -> np.ndarray:
-        """Chromosome of the exact (8-bit, zero-margin) reference design."""
-        return quant.exact_genes(self.n_comparators)
+        """Chromosome of the exact (8-bit, zero-margin, un-truncated,
+        exact-vote) reference design."""
+        return quant.exact_tree_genes(self.n_comparators)
 
 
 jax.tree_util.register_pytree_node(
@@ -88,7 +95,8 @@ jax.tree_util.register_pytree_node(
         (p.feature, p.threshold, p.path, p.path_len, p.n_neg, p.leaf_class,
          p.leaf_tree, p.x8, p.x_sel, p.y, p.area_lut, p.lut_offsets),
         (p.overhead_mm2, p.exact_area_mm2, p.exact_accuracy, p.n_classes,
-         p.n_features, p.n_trees, p.tree_comparators, p.tree_leaves),
+         p.n_features, p.n_trees, p.tree_comparators, p.tree_leaves,
+         p.vote_mm2_exact, p.vote_mm2_approx),
     ),
     lambda aux, children: SearchProblem(*children, *aux),
 )
@@ -99,13 +107,31 @@ jax.tree_util.register_pytree_node(
 # ---------------------------------------------------------------------------
 
 def decode_chromosome(problem: SearchProblem, genes):
-    """genes (..., 2N) -> (bits, substituted integer thresholds), both (..., N)."""
-    bits, margin = quant.decode_genes(genes)
+    """genes (..., 3N+1) -> (bits, t_sub, vote_cap): the EFFECTIVE design.
+
+    Decodes the cross-layer chromosome (DESIGN.md §16) and folds LSB
+    truncation into the returned pair — `bits` is the effective comparator
+    width p - k and `t_sub` the substituted threshold shifted down by k —
+    because a k-truncated comparator IS the exact comparator at that
+    width/threshold. `vote_cap` is the f32 saturation the vote counts are
+    clipped to before argmax: 1.0 under the approximate OR-tree adder,
+    +inf (an exact f32 no-op) under the exact popcount adder.
+    """
+    bits, margin, trunc, vote = quant.decode_tree_genes(genes)
     t_int = quant.threshold_to_int(problem.threshold, bits)
-    return bits, quant.substitute(t_int, margin, bits)
+    t_sub = quant.substitute(t_int, margin, bits)
+    vote_cap = jnp.where(vote > 0, jnp.float32(1.0), jnp.float32(jnp.inf))
+    return bits - trunc, jnp.right_shift(t_sub, trunc), vote_cap
 
 
-def predict_votes(problem: SearchProblem, bits, t_sub):
+def vote_area_mm2(problem: SearchProblem, vote_cap):
+    """Vote-stage area term selected by the decoded cap (0 when K = 1)."""
+    return jnp.where(jnp.isfinite(vote_cap),
+                     jnp.float32(problem.vote_mm2_approx),
+                     jnp.float32(problem.vote_mm2_exact))
+
+
+def predict_votes(problem: SearchProblem, bits, t_sub, vote_cap=None):
     """(B,) voted class per sample — the block-diagonal super-tree dataflow.
 
     Exactly one leaf per tree satisfies its path, so `sat @ CLS1H` counts one
@@ -124,35 +150,42 @@ def predict_votes(problem: SearchProblem, bits, t_sub):
     sat = (score == target[None, :]).astype(jnp.float32)
     cls1h = jax.nn.one_hot(problem.leaf_class, problem.n_classes)
     votes = sat @ cls1h                                      # (B, C)
+    if vote_cap is not None:
+        # saturating (approximate) vote adder; +inf cap = exact no-op
+        votes = jnp.minimum(votes, vote_cap)
     return jnp.argmax(votes, axis=1)
 
 
 def chromosome_accuracy(problem: SearchProblem, genes):
-    bits, t_sub = decode_chromosome(problem, genes)
-    pred = predict_votes(problem, bits, t_sub)
+    bits, t_sub, vote_cap = decode_chromosome(problem, genes)
+    pred = predict_votes(problem, bits, t_sub, vote_cap)
     return jnp.mean((pred == problem.y).astype(jnp.float32))
 
 
 def chromosome_area_mm2(problem: SearchProblem, genes):
-    """Additive LUT area (the paper's GA estimator) + per-node overheads."""
-    bits, t_sub = decode_chromosome(problem, genes)
+    """Additive LUT area (the paper's GA estimator) + per-node overheads +
+    the vote-adder cell of the decoded mode (DESIGN.md §16)."""
+    bits, t_sub, vote_cap = decode_chromosome(problem, genes)
     idx = problem.lut_offsets[bits] + t_sub
-    return problem.area_lut[idx].sum() + problem.overhead_mm2
+    return (problem.area_lut[idx].sum() + problem.overhead_mm2
+            + vote_area_mm2(problem, vote_cap))
 
 
 def objectives(problem: SearchProblem, genes):
     """(accuracy_loss vs exact, normalized area) — both minimized.
 
     ONE shared gene decode feeds both objectives (DESIGN.md §12): the
-    accuracy term consumes (bits, t_sub) for the comparator eval, the area
-    term reuses the same pair as the LUT index — historically each objective
-    decoded the chromosome independently, doubling the decode work per eval.
+    accuracy term consumes the effective (bits, t_sub, vote_cap) for the
+    comparator/vote eval, the area term reuses the same triple as the LUT
+    index + vote-adder cell — historically each objective decoded the
+    chromosome independently, doubling the decode work per eval.
     """
-    bits, t_sub = decode_chromosome(problem, genes)
-    pred = predict_votes(problem, bits, t_sub)
+    bits, t_sub, vote_cap = decode_chromosome(problem, genes)
+    pred = predict_votes(problem, bits, t_sub, vote_cap)
     acc = jnp.mean((pred == problem.y).astype(jnp.float32))
     idx = problem.lut_offsets[bits] + t_sub
-    area = problem.area_lut[idx].sum() + problem.overhead_mm2
+    area = (problem.area_lut[idx].sum() + problem.overhead_mm2
+            + vote_area_mm2(problem, vote_cap))
     return jnp.stack([problem.exact_accuracy - acc,
                       area / problem.exact_area_mm2])
 
@@ -184,12 +217,20 @@ def build_problem(ptrees, x_test: np.ndarray, y_test: np.ndarray,
     lut, offsets = area_mod.build_area_lut()
     x8 = quantize_u8(x_test).astype(np.int32)
     overhead = area_mod.tree_overhead_mm2(n_total, l_total)
+    # vote-adder cells, priced from the isolated netlist harness (§16);
+    # both zero for K = 1 (no vote stage exists — the gene is inert)
+    vote_exact = area_mod.vote_adder_area_mm2(len(ptrees), int(n_classes),
+                                              approx=False)
+    vote_approx = area_mod.vote_adder_area_mm2(len(ptrees), int(n_classes),
+                                               approx=True)
 
-    # exact design: 8-bit, zero margin (float64 LUT sum, like core.approx)
+    # exact design: 8-bit, zero margin, exact vote adder (float64 LUT sum,
+    # like core.approx)
     t8 = np.clip(np.floor(threshold.astype(np.float64) * 256.0), 0, 255)
     t8 = t8.astype(np.int64)
     exact_bits = np.full(n_total, quant.MAX_BITS, dtype=np.int64)
-    exact_area = float(lut[offsets[exact_bits] + t8].sum() + overhead)
+    exact_area = float(lut[offsets[exact_bits] + t8].sum() + overhead
+                       + vote_exact)
 
     problem = SearchProblem(
         feature=jnp.asarray(feature),
@@ -212,9 +253,11 @@ def build_problem(ptrees, x_test: np.ndarray, y_test: np.ndarray,
         n_trees=len(ptrees),
         tree_comparators=tuple(pt.n_comparators for pt in ptrees),
         tree_leaves=tuple(pt.n_leaves for pt in ptrees),
+        vote_mm2_exact=float(vote_exact),
+        vote_mm2_approx=float(vote_approx),
     )
     exact_acc = float(chromosome_accuracy(
-        problem, jnp.asarray(quant.exact_genes(n_total))))
+        problem, jnp.asarray(quant.exact_tree_genes(n_total))))
     return dataclasses.replace(problem, exact_accuracy=exact_acc)
 
 

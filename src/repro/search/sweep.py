@@ -106,10 +106,19 @@ class PaddedProblem:
     overhead_mm2: jnp.ndarray    # () float32
     exact_area_mm2: jnp.ndarray  # () float32
     exact_accuracy: jnp.ndarray  # () float32
+    # integer vote-adder quanta (DESIGN.md §16): exact popcount tree vs
+    # saturating OR-tree. Integer-valued f32 like the LUT rows, so the
+    # area sum stays vmap-order invariant. Both 0 for single trees.
+    vote_units_exact: jnp.ndarray = dataclasses.field(
+        default_factory=lambda: jnp.float32(0.0))
+    vote_units_approx: jnp.ndarray = dataclasses.field(
+        default_factory=lambda: jnp.float32(0.0))
 
     @property
     def n_genes(self) -> int:
-        return 2 * int(self.feature.shape[0])
+        # cross-layer layout (DESIGN.md §16): 3 genes per comparator slot
+        # plus the trailing forest-level vote-adder gene
+        return 3 * int(self.feature.shape[0]) + 1
 
 
 jax.tree_util.register_pytree_node(
@@ -190,6 +199,10 @@ def pad_problem(problem: SearchProblem,
         overhead_mm2=jnp.float32(problem.overhead_mm2),
         exact_area_mm2=jnp.float32(problem.exact_area_mm2),
         exact_accuracy=jnp.float32(problem.exact_accuracy),
+        vote_units_exact=jnp.float32(area_mod.vote_adder_units(
+            problem.n_trees, problem.n_classes, approx=False)),
+        vote_units_approx=jnp.float32(area_mod.vote_adder_units(
+            problem.n_trees, problem.n_classes, approx=True)),
     )
 
 
@@ -198,13 +211,20 @@ def pad_problem(problem: SearchProblem,
 # ---------------------------------------------------------------------------
 
 def _padded_decode(pp: PaddedProblem, genes):
-    """ONE gene decode shared by predictions and the area term (§12)."""
-    bits, margin = quant.decode_genes(genes)
+    """ONE gene decode shared by predictions and the area term (§12).
+
+    Returns the EFFECTIVE (bits, t_sub, vote_cap): comparator truncation is
+    folded into the operands exactly as in `search.decode_chromosome`
+    (DESIGN.md §16), so the padded dataflow prices and evaluates the same
+    approximate cells the netlist lowers."""
+    bits, margin, trunc, vote = quant.decode_tree_genes(genes)
     t_int = quant.threshold_to_int(pp.threshold, bits)
-    return bits, quant.substitute(t_int, margin, bits)
+    t_sub = quant.substitute(t_int, margin, bits)
+    vote_cap = jnp.where(vote > 0, jnp.float32(1.0), jnp.float32(jnp.inf))
+    return bits - trunc, jnp.right_shift(t_sub, trunc), vote_cap
 
 
-def _padded_predict_decoded(pp: PaddedProblem, bits, t_sub):
+def _padded_predict_decoded(pp: PaddedProblem, bits, t_sub, vote_cap):
     """(Bp,) voted class from an already-decoded chromosome."""
     x_p = quant.inputs_at_precision(pp.x_sel, bits)
     d = (x_p > t_sub[None, :]).astype(jnp.float32)
@@ -212,6 +232,8 @@ def _padded_predict_decoded(pp: PaddedProblem, bits, t_sub):
     target = (pp.path_len - pp.n_neg).astype(jnp.float32)
     sat = (score == target[None, :]).astype(jnp.float32)
     votes = sat @ pp.leaf_onehot
+    # saturating (approximate) vote adder: +inf cap = exact f32 no-op
+    votes = jnp.minimum(votes, vote_cap)
     return jnp.argmax(votes, axis=1)
 
 
@@ -224,30 +246,34 @@ def padded_predict(pp: PaddedProblem, genes):
     feature gather is hoisted onto the context (`pp.x_sel`, §12), so the
     per-chromosome work starts at the precision shift.
     """
-    bits, t_sub = _padded_decode(pp, genes)
-    return _padded_predict_decoded(pp, bits, t_sub)
+    bits, t_sub, vote_cap = _padded_decode(pp, genes)
+    return _padded_predict_decoded(pp, bits, t_sub, vote_cap)
 
 
 def padded_objectives(pp: PaddedProblem, genes):
-    """(accuracy loss, normalized area) for one padded chromosome (2*Np,).
+    """(accuracy loss, normalized area) for one padded chromosome (3*Np+1,).
 
     Matches `search.objectives` on the real slice up to float rounding (the
     area term sums integer quanta instead of f32 mm^2 rows — that is what
     buys vmap-order invariance); the *inertness* of pad genes is exact.
-    One shared decode feeds both objectives (§12).
+    One shared decode feeds both objectives (§12). The vote-adder term
+    selects between the two integer unit counts (DESIGN.md §16), so the
+    sum stays integer-valued in f32.
     """
-    bits, t_sub = _padded_decode(pp, genes)
-    pred = _padded_predict_decoded(pp, bits, t_sub)
+    bits, t_sub, vote_cap = _padded_decode(pp, genes)
+    pred = _padded_predict_decoded(pp, bits, t_sub, vote_cap)
     acc = jnp.sum((pred == pp.y).astype(jnp.float32)) / pp.n_valid
 
     idx = pp.lut_offsets[bits] + t_sub
     units = jnp.where(pp.comp_valid, pp.area_lut_units[idx], 0.0).sum()
+    units = units + jnp.where(jnp.isfinite(vote_cap),
+                              pp.vote_units_approx, pp.vote_units_exact)
     area = units * area_mod.AREA_QUANTUM_MM2 + pp.overhead_mm2
     return jnp.stack([pp.exact_accuracy - acc, area / pp.exact_area_mm2])
 
 
 def population_objectives(pp: PaddedProblem, pop):
-    """(P, 2*Np) genes -> (P, 2) objectives — the `fitness_from_ctx` handed
+    """(P, 3*Np+1) genes -> (P, 2) objectives — the `fitness_from_ctx` handed
     to `nsga2.make_batched_init` / `make_batched_chunk`."""
     return jax.vmap(lambda g: padded_objectives(pp, g))(pop)
 
@@ -396,7 +422,7 @@ def run_sweep(problems: dict[str, SearchProblem],
     """Run the NSGA-II campaign over every problem in `problems`.
 
     Returns per-dataset `SearchResult`s (pareto genes already unpadded back
-    to each problem's real 2N columns) plus bucket-level dispatch/wall
+    to each problem's real 3N+1 columns) plus bucket-level dispatch/wall
     accounting. With `out_dir`, each dataset writes the standard
     `pareto.json` artifact (and RTL, per `emit_rtl`/`verify_rtl`) under
     `out_dir/<dataset>/` through the single-run pipeline.

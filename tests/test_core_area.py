@@ -51,11 +51,17 @@ def test_gate_count_vs_truth_table_synthesis(p, t):
 
 
 def test_lut_shape_and_indexing():
+    # since DESIGN.md §16 the LUT spans p in [0, MAX_BITS]: truncation can
+    # shrink effective width below MIN_BITS, down to the 0-bit const-false
     lut, off = area.build_area_lut()
-    assert lut.shape[0] == sum(1 << p for p in range(2, 9))
+    assert lut.shape[0] == sum(1 << p for p in range(0, 9))
+    np.testing.assert_array_equal(off[:3], [0, 1, 3])
     # LUT at (p=8, t) equals direct model
     for t in [0, 1, 127, 128, 200, 255]:
         assert lut[off[8] + t] == np.float32(area.comparator_area_mm2(t, 8))
+    # sub-MIN_BITS rows are all-zero (0/1-bit greater-than needs no gates)
+    assert lut[off[0]] == 0.0
+    assert (lut[off[1]: off[1] + 2] == 0.0).all()
     # lower precision is never more expensive than 8-bit on average
     mean8 = lut[off[8]: off[8] + 256].mean()
     mean2 = lut[off[2]: off[2] + 4].mean()

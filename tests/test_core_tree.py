@@ -99,3 +99,20 @@ def test_decode_genes_ranges():
     # exact genes decode to (8, 0)
     eb, em = quant.decode_genes(jnp.asarray(quant.exact_genes(5)))
     assert (np.asarray(eb) == 8).all() and (np.asarray(em) == 0).all()
+
+
+def test_decode_tree_genes_ranges():
+    """The §16 cross-layer layout: stride-3 comparator genes (precision,
+    margin, truncation) plus one trailing vote-adder gene."""
+    g = np.random.default_rng(2).uniform(0, 1, 3 * 257 + 1)
+    bits, marg, trunc, vote = quant.decode_tree_genes(jnp.asarray(g))
+    assert bits.shape == marg.shape == trunc.shape == (257,)
+    assert int(bits.min()) >= 2 and int(bits.max()) <= 8
+    assert int(marg.min()) >= -5 and int(marg.max()) <= 5
+    assert int(trunc.min()) >= 0 and int(trunc.max()) <= quant.MAX_TRUNC
+    assert int(vote) in (0, 1)
+    # exact genes decode to (8, 0) with every approximation OFF
+    eb, em, et, ev = quant.decode_tree_genes(
+        jnp.asarray(quant.exact_tree_genes(5)))
+    assert (np.asarray(eb) == 8).all() and (np.asarray(em) == 0).all()
+    assert (np.asarray(et) == 0).all() and int(ev) == 0

@@ -176,6 +176,31 @@ def test_mlp_vmapped_bucket_matches_serial(mlp_problem):
                                       np.asarray(serial(ops[i], pops[i])))
 
 
+def test_tree_unpad_genes_relocates_vote_gene(tree_problem):
+    """§16 layout: comparator genes unpad as a prefix slice, but the trailing
+    design-level vote gene must come from the LAST padded column."""
+    from repro.core import quant
+    fam = get_family("tree")
+    (bucket,) = sweep.plan_buckets({"t": tree_problem}, max_buckets=1)
+    dims = (2 * bucket.dims[0],) + tuple(bucket.dims[1:])
+    n_genes = fam.padded_n_genes(dims)
+    assert n_genes == 3 * dims[0] + 1
+    rng = np.random.default_rng(5)
+    padded_pop = rng.uniform(size=(4, n_genes)).astype(np.float32)
+    unpadded = fam.unpad_genes(tree_problem, padded_pop, dims)
+    assert unpadded.shape == (4, tree_problem.n_genes)
+    n_comp_genes = tree_problem.n_genes - 1
+    np.testing.assert_array_equal(unpadded[:, :n_comp_genes],
+                                  padded_pop[:, :n_comp_genes])
+    np.testing.assert_array_equal(unpadded[:, -1], padded_pop[:, -1])
+    # padded exact genes decode to the exact design on the REAL slice
+    exact = fam.padded_exact_genes(dims)
+    bits, marg, trunc, vote = quant.decode_tree_genes(
+        jnp.asarray(fam.unpad_genes(tree_problem, exact[None], dims)[0]))
+    assert (np.asarray(bits) == 8).all() and (np.asarray(marg) == 0).all()
+    assert (np.asarray(trunc) == 0).all() and int(vote) == 0
+
+
 def test_mlp_unpad_genes_round_trip(mlp_problem):
     fam = get_family("mlp")
     dims = (8, 4, 16, 256)          # strictly larger than seeds h=4

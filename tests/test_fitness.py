@@ -101,11 +101,11 @@ def test_fitness_errors_matches_tree_infer_scores_oracle(forest_problem):
         prob.feature, prob.path, prob.path_len, prob.n_neg, prob.leaf_class,
         prob.n_classes, prob.n_features)
     genes = jax.random.uniform(jax.random.PRNGKey(7), (9, prob.n_genes))
-    scale, thr = ops.decode_population(prob.threshold, genes)
-    errors = np.asarray(ops.fitness_errors(fit_ops, scale, thr,
+    scale, thr, vote_cap = ops.decode_population(prob.threshold, genes)
+    errors = np.asarray(ops.fitness_errors(fit_ops, scale, thr, vote_cap,
                                            interpret=True))
     preds = np.asarray(ops.tree_infer_predict(prob.x8, ti_ops, scale, thr,
-                                              interpret=True))
+                                              vote_cap, interpret=True))
     want = (preds != np.asarray(prob.y)[None, :]).sum(axis=1)
     np.testing.assert_array_equal(errors, want.astype(np.float32))
 
@@ -126,13 +126,18 @@ def test_raw_kernel_matches_ref_oracle_padded_ops(tree_problem, seed,
     bits = rng.integers(2, 9, (p, n))
     scale = jnp.asarray(np.exp2(-(8 - bits)).astype(np.float32))
     thr = jnp.asarray(rng.integers(0, 256, (p, n)).astype(np.float32))
+    # mixed exact/approx vote caps (lane-replicated for the kernel operand)
+    cap = jnp.asarray(np.where(rng.integers(0, 2, p) > 0, 1.0,
+                               np.inf).astype(np.float32))
+    from repro.kernels.fitness import LANES
+    vcap = jnp.broadcast_to(cap[:, None], (p, LANES))
     x_pad = ops._pad_to(x_sel, block_b, 0)
     y_pad = ops._pad_to(y_row, block_b, 1, value=-1.0)
     got = np.asarray(raw_kernel(x_pad, scale, thr, path_t, target, cls1h,
-                                y_pad, block_p=block_p, block_b=block_b,
+                                y_pad, vcap, block_p=block_p, block_b=block_b,
                                 interpret=True))
     want = np.asarray(ref.fitness_correct_counts(
-        x_pad, scale, thr, path_t, target, cls1h, y_pad))
+        x_pad, scale, thr, path_t, target, cls1h, y_pad, cap))
     for lane in (0, 1, 127):
         np.testing.assert_array_equal(got[:, lane], want)
 
@@ -158,18 +163,25 @@ def test_fused_errors_on_sweep_padded_problem(tree_problem, forest_problem):
         g_real = rng.uniform(0, 1, problem.n_genes).astype(np.float32)
         a = rng.uniform(0, 1, (1, pp.n_genes)).astype(np.float32)
         b = rng.uniform(0, 1, (1, pp.n_genes)).astype(np.float32)
-        a[0, :problem.n_genes] = g_real
-        b[0, :problem.n_genes] = g_real
+        # §16 layout: real comparator genes are a prefix, but the trailing
+        # vote gene lives in the LAST padded column (TreeFamily.unpad_genes)
+        n_comp_genes = problem.n_genes - 1
+        for g in (a, b):
+            g[0, :n_comp_genes] = g_real[:n_comp_genes]
+            g[0, -1] = g_real[-1]
 
         errs = []
         for g in (a, b):
-            scale, thr = ops.decode_population(pp.threshold, jnp.asarray(g))
+            scale, thr, vote_cap = ops.decode_population(pp.threshold,
+                                                         jnp.asarray(g))
             errs.append(np.asarray(ops.fitness_errors(
-                fit_ops, scale, thr, interpret=True)))
+                fit_ops, scale, thr, vote_cap, interpret=True)))
         np.testing.assert_array_equal(errs[0], errs[1], err_msg=name)
 
-        bits, t_sub = search.decode_chromosome(problem, jnp.asarray(g_real))
-        pred = np.asarray(search.predict_votes(problem, bits, t_sub))
+        bits, t_sub, vote_cap = search.decode_chromosome(problem,
+                                                         jnp.asarray(g_real))
+        pred = np.asarray(search.predict_votes(problem, bits, t_sub,
+                                               vote_cap))
         want = float((pred != np.asarray(problem.y)).sum())
         assert errs[0][0] == want, name
 
@@ -186,21 +198,29 @@ def test_problem_x_sel_is_hoisted_gather(tree_problem, forest_problem):
 
 def test_decode_population_full_consistent(tree_problem):
     """The shared decode returns exactly what the two historical decodes
-    produced: (scale, thr) for the kernel, (bits, t_sub) for the area LUT."""
+    produced — (scale, thr) for the kernel, (bits, t_sub) for the area LUT —
+    with DESIGN.md §16 truncation folded into the EFFECTIVE operands."""
     genes = jax.random.uniform(jax.random.PRNGKey(11),
                                (6, tree_problem.n_genes))
-    scale, t_sub, bits = ops.decode_population_full(tree_problem.threshold,
+    scale, t_sub, bits, vote_cap = ops.decode_population_full(
+        tree_problem.threshold, genes)
+    scale2, thr2, vote_cap2 = ops.decode_population(tree_problem.threshold,
                                                     genes)
-    scale2, thr2 = ops.decode_population(tree_problem.threshold, genes)
     np.testing.assert_array_equal(np.asarray(scale), np.asarray(scale2))
     np.testing.assert_array_equal(np.asarray(t_sub, np.float32),
                                   np.asarray(thr2))
-    bits_w, margin = quant.decode_genes(genes)
+    np.testing.assert_array_equal(np.asarray(vote_cap), np.asarray(vote_cap2))
+    bits_w, margin, trunc_w, vote_w = quant.decode_tree_genes(genes)
     t_sub_w = quant.substitute(
         quant.threshold_to_int(tree_problem.threshold[None, :], bits_w),
         margin, bits_w)
-    np.testing.assert_array_equal(np.asarray(bits), np.asarray(bits_w))
-    np.testing.assert_array_equal(np.asarray(t_sub), np.asarray(t_sub_w))
+    np.testing.assert_array_equal(np.asarray(bits),
+                                  np.asarray(bits_w - trunc_w))
+    np.testing.assert_array_equal(
+        np.asarray(t_sub), np.asarray(jnp.right_shift(t_sub_w, trunc_w)))
+    np.testing.assert_array_equal(
+        np.asarray(vote_cap),
+        np.where(np.asarray(vote_w) > 0, np.float32(1.0), np.float32(np.inf)))
 
 
 def test_fitness_errors_rejects_bad_blocking(tree_problem):
@@ -210,6 +230,8 @@ def test_fitness_errors_rejects_bad_blocking(tree_problem):
     y_pad = ops._pad_to(y_row, 256, 1, value=-1.0)
     n = x_sel.shape[1]
     scale = jnp.ones((6, n), jnp.float32)
+    from repro.kernels.fitness import LANES
+    vcap = jnp.full((6, LANES), jnp.inf, jnp.float32)
     with pytest.raises(ValueError, match="block_p"):
-        raw_kernel(x_pad, scale, scale, path_t, target, cls1h, y_pad,
+        raw_kernel(x_pad, scale, scale, path_t, target, cls1h, y_pad, vcap,
                    block_p=4, block_b=256, interpret=True)

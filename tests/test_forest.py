@@ -39,7 +39,7 @@ def test_forest_nsga2_finds_reductions():
     fit, exact_acc, exact_area = F.make_forest_fitness(fr, ds.x_test, ds.y_test)
     cfg = nsga2.NSGA2Config(pop_size=24, n_generations=10)
     state = nsga2.run(jax.random.PRNGKey(0), fit, fr.n_genes, cfg,
-                      seed_genes=quant.exact_genes(fr.n_comparators))
+                      seed_genes=quant.exact_tree_genes(fr.n_comparators))
     objs, _ = nsga2.pareto_front(state.objs, state.genes)
     ok = objs[objs[:, 0] <= 0.01 + 1e-9]
     assert len(ok) > 0

@@ -30,13 +30,17 @@ def test_tree_infer_matches_core_reference(tree_setup):
     ds, pt, x8 = tree_setup
     operands = ops.prepare_tree_operands(pt, ds.n_features)
     rng = np.random.default_rng(0)
-    genes = jnp.asarray(rng.uniform(0, 1, (9, 2 * pt.n_comparators)).astype(np.float32))
-    scale, thr = ops.decode_population(jnp.asarray(pt.threshold), genes)
+    genes = jnp.asarray(
+        rng.uniform(0, 1, (9, 3 * pt.n_comparators + 1)).astype(np.float32))
+    # the core.tree oracle predates §16 approximation genes: zero them
+    genes = genes.at[:, 2::3].set(0.0).at[:, -1].set(0.0)
+    scale, thr, vote_cap = ops.decode_population(jnp.asarray(pt.threshold),
+                                                 genes)
     preds = ops.tree_infer_predict(jnp.asarray(x8), operands, scale, thr,
-                                   interpret=True)
+                                   vote_cap, interpret=True)
     pj = ptree_to_jnp(pt)
     for i in range(genes.shape[0]):
-        bits, marg = quant.decode_genes(genes[i])
+        bits, marg, _, _ = quant.decode_tree_genes(genes[i])
         want = predict_quantized(jnp.asarray(x8), pj, bits, marg)
         np.testing.assert_array_equal(np.asarray(preds[i]), np.asarray(want))
 
@@ -44,10 +48,11 @@ def test_tree_infer_matches_core_reference(tree_setup):
 def test_tree_infer_exact_genes_match_float_tree(tree_setup):
     ds, pt, x8 = tree_setup
     operands = ops.prepare_tree_operands(pt, ds.n_features)
-    genes = jnp.asarray(quant.exact_genes(pt.n_comparators))[None]
-    scale, thr = ops.decode_population(jnp.asarray(pt.threshold), genes)
+    genes = jnp.asarray(quant.exact_tree_genes(pt.n_comparators))[None]
+    scale, thr, vote_cap = ops.decode_population(jnp.asarray(pt.threshold),
+                                                 genes)
     preds = ops.tree_infer_predict(jnp.asarray(x8), operands, scale, thr,
-                                   interpret=True)
+                                   vote_cap, interpret=True)
     pj = ptree_to_jnp(pt)
     bits = jnp.full(pt.n_comparators, 8, jnp.int32)
     marg = jnp.zeros(pt.n_comparators, jnp.int32)

@@ -32,8 +32,18 @@ def seeds_tree():
     return ds, tree, to_parallel(tree)
 
 
+def _legacy_genes(rng, n_comparators: int) -> np.ndarray:
+    """Random chromosome in the pre-§16 subspace: precision/margin genes
+    free, truncation and vote-adder genes zeroed (the oracles below predate
+    approximate cells)."""
+    g = rng.uniform(0, 1, 3 * n_comparators + 1).astype(np.float32)
+    g[2::3] = 0.0
+    g[-1] = 0.0
+    return g
+
+
 def _decode(pt_threshold, genes):
-    bits, marg = quant.decode_genes(jnp.asarray(genes))
+    bits, marg, _, _ = quant.decode_tree_genes(jnp.asarray(genes))
     t_sub = quant.substitute(
         quant.threshold_to_int(jnp.asarray(pt_threshold), bits), marg, bits)
     return np.asarray(bits), np.asarray(t_sub)
@@ -54,6 +64,74 @@ def test_comparator_gates_match_area_model_exhaustively():
             got = (int((ops == netlist.AND).sum()),
                    int((ops == netlist.OR).sum()))
             assert got == area.comparator_gate_counts(t, p), (t, p)
+
+
+def test_truncated_comparator_gates_match_area_model_exhaustively():
+    """EVERY truncated-cell variant — p in [MIN_BITS, MAX_BITS], k in
+    [0, MAX_TRUNC], all 2^p thresholds — lowered through the real
+    `build_tree_cells` path: gate counts equal
+    `core.area.trunc_comparator_gate_counts` (DESIGN.md §16), so the GA's
+    area quanta and the emitted hardware cannot drift apart."""
+    one_comp = ParallelTree(
+        feature=np.zeros(1, np.int32), threshold=np.zeros(1, np.float32),
+        path=np.zeros((0, 1), np.int8), path_len=np.zeros(0, np.int32),
+        n_neg=np.zeros(0, np.int32), leaf_class=np.zeros(0, np.int32),
+        n_classes=2)
+    for p in range(quant.MIN_BITS, quant.MAX_BITS + 1):
+        for k in range(quant.MAX_TRUNC + 1):
+            for t in range(1 << p):
+                nb = netlist.NetlistBuilder()
+                cells = netlist.build_tree_cells(
+                    nb, one_comp, np.array([p]), np.array([t]), 2,
+                    trunc=np.array([k]))
+                ops = np.asarray(nb.op)
+                got = (int((ops == netlist.AND).sum()),
+                       int((ops == netlist.OR).sum()))
+                assert got == area.trunc_comparator_gate_counts(t, p, k), \
+                    (t, p, k)
+                assert cells.comparators[0].trunc == k
+    # fully-truncated minimum-width cells degenerate to constant false
+    assert area.trunc_comparator_gate_counts(1, 2, 2) == (0, 0)
+
+
+@settings(deadline=None, max_examples=80)
+@given(p=st.integers(quant.MIN_BITS, quant.MAX_BITS),
+       k=st.integers(0, quant.MAX_TRUNC),
+       t_raw=st.integers(0, (1 << quant.MAX_BITS) - 1))
+def test_truncation_flips_only_within_threshold_block(p, k, t_raw):
+    """k-LSB truncation can only flip decisions for codes in the same
+    2^k-aligned block as the threshold (equivalently: within the bottom
+    2^k codes above it) — and every flip is True -> False, never the
+    reverse. This is the §16 bound on how far a truncated cell can stray
+    from the exact comparator."""
+    t = t_raw % (1 << p)
+    x = np.arange(1 << p)
+    exact = x > t
+    truncated = (x >> k) > (t >> k)
+    flips = np.flatnonzero(exact != truncated)
+    assert np.all((flips >> k) == (t >> k))        # same 2^k block as t
+    assert np.all((flips - t) < (1 << k))          # within 2^k codes of t
+    assert flips.size <= (1 << k) - 1
+    assert np.all(exact[flips])                    # only True -> False
+
+
+def test_vote_adder_pricing_matches_isolated_lowering():
+    """`area.vote_adder_units` prices exactly the gate inventory of the
+    isolated vote-stage harness; the approximate OR-tree is never costlier
+    than the exact popcount adder, and K = 1 designs have no adder at all."""
+    for n_trees in (2, 3, 5):
+        for n_classes in (2, 5):
+            for approx in (False, True):
+                counts = netlist.vote_adder_gate_counts(n_trees, n_classes,
+                                                        approx=approx)
+                units = area.vote_adder_units(n_trees, n_classes, approx)
+                want = area.gate_area_mm2(*counts) / area.AREA_QUANTUM_MM2
+                assert units == round(want)
+                assert units > 0
+            assert (area.vote_adder_units(n_trees, n_classes, True)
+                    <= area.vote_adder_units(n_trees, n_classes, False))
+    assert area.vote_adder_units(1, 5, False) == 0
+    assert area.vote_adder_units(1, 5, True) == 0
 
 
 def test_constant_false_comparator_folds_away(seeds_tree):
@@ -113,9 +191,9 @@ def test_forest_with_non_power_of_two_classes():
     x8 = x8.astype(np.int32)
     thresholds = np.concatenate([p.threshold for p in fr.ptrees])
     for trial in range(3):
-        genes = rng.uniform(0, 1, 2 * fr.n_comparators).astype(np.float32)
+        genes = _legacy_genes(rng, fr.n_comparators)
         bits, t_sub = _decode(thresholds, genes)
-        bits_j, marg_j = quant.decode_genes(jnp.asarray(genes))
+        bits_j, marg_j, _, _ = quant.decode_tree_genes(jnp.asarray(genes))
         circ = netlist.build_circuit(fr.ptrees, bits, t_sub, 5)
         got = np.asarray(netlist.simulate(circ, x8))
         want = np.asarray(forest_mod.forest_predict(
@@ -134,9 +212,9 @@ def test_netlist_sim_matches_descent_oracle(seeds_tree, draw_seed):
     circuit equals the sequential quantized descent, bit for bit."""
     ds, tree, pt = seeds_tree
     rng = np.random.default_rng(draw_seed)
-    genes = rng.uniform(0, 1, 2 * pt.n_comparators).astype(np.float32)
+    genes = _legacy_genes(rng, pt.n_comparators)
     bits, t_sub = _decode(pt.threshold, genes)
-    _, marg = quant.decode_genes(jnp.asarray(genes))
+    _, marg, _, _ = quant.decode_tree_genes(jnp.asarray(genes))
     circ = netlist.build_circuit(pt, bits, t_sub, pt.n_classes)
     x8 = quantize_u8(ds.x_test).astype(np.int32)
     internal = np.flatnonzero(tree.feature >= 0)
@@ -241,15 +319,18 @@ def test_pareto_points_verified_vertebral_forest(tmp_path):
     assert "majority-vote adder tree" in v
     assert v.count("endmodule") == 5  # 4 tree modules + top
 
-    # explicit three-way re-check of one point, independent of the engine
+    # explicit three-way re-check of one point, independent of the engine.
+    # decode_chromosome returns the EFFECTIVE design (§16 truncation already
+    # folded into bits/t_sub), so the netlist lowers it with trunc unset.
     g = jnp.asarray(artifact["pareto"][0]["genes"], jnp.float32)
-    bits, t_sub = decode_chromosome(prob, g)
+    bits, t_sub, vote_cap = decode_chromosome(prob, g)
+    vote_adder = "approx" if np.isfinite(float(vote_cap)) else "exact"
     circ = netlist.build_circuit(search.problem_ptrees(prob),
                                  np.asarray(bits), np.asarray(t_sub),
-                                 prob.n_classes)
+                                 prob.n_classes, vote_adder=vote_adder)
     sim = np.asarray(netlist.simulate(circ, prob.x8))
-    np.testing.assert_array_equal(sim,
-                                  np.asarray(predict_votes(prob, bits, t_sub)))
+    np.testing.assert_array_equal(
+        sim, np.asarray(predict_votes(prob, bits, t_sub, vote_cap)))
 
 
 def test_rtl_flags_require_out_dir(seeds_tree):

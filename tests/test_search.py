@@ -30,6 +30,13 @@ def tree_setup():
     return ds, tree, pt
 
 
+def _legacy_subspace(genes):
+    """Zero the approximation genes (trunc at 2::3, trailing vote gene) so
+    the pre-§16 per-tree oracles below — which model neither comparator
+    truncation nor the saturating vote adder — stay valid comparators."""
+    return genes.at[:, 2::3].set(0.0).at[:, -1].set(0.0)
+
+
 def _descent_vote(fr, x8, bits_all, marg_all):
     """Oracle #2: per-tree sequential descent + majority vote (numpy)."""
     votes = np.zeros((x8.shape[0], fr.n_classes), np.float32)
@@ -58,13 +65,13 @@ def test_forest_parity_three_ways(forest_setup):
     thresholds = jnp.concatenate([jnp.asarray(p.threshold) for p in fr.ptrees])
     operands = ops.prepare_forest_operands(fr.ptrees, ds.n_features)
     rng = np.random.default_rng(0)
-    genes = jnp.asarray(
-        rng.uniform(0, 1, (8, fr.n_genes)).astype(np.float32))
-    scale, thr = ops.decode_population(thresholds, genes)
+    genes = _legacy_subspace(jnp.asarray(
+        rng.uniform(0, 1, (8, fr.n_genes)).astype(np.float32)))
+    scale, thr, vote_cap = ops.decode_population(thresholds, genes)
     preds = ops.tree_infer_predict(jnp.asarray(x8), operands, scale, thr,
-                                   interpret=True)
+                                   vote_cap, interpret=True)
     for i in range(genes.shape[0]):
-        bits, marg = quant.decode_genes(genes[i])
+        bits, marg, _, _ = quant.decode_tree_genes(genes[i])
         looped = forest_mod.forest_predict(fr, jnp.asarray(x8), bits, marg)
         descent = _descent_vote(fr, x8, np.asarray(bits), np.asarray(marg))
         np.testing.assert_array_equal(np.asarray(preds[i]), np.asarray(looped))
@@ -78,12 +85,13 @@ def test_forest_parity_leaf_blocked_kernel(forest_setup):
     operands = ops.prepare_forest_operands(fr.ptrees, ds.n_features)
     rng = np.random.default_rng(1)
     genes = jnp.asarray(rng.uniform(0, 1, (4, fr.n_genes)).astype(np.float32))
-    scale, thr = ops.decode_population(thresholds, genes)
+    scale, thr, vote_cap = ops.decode_population(thresholds, genes)
     want = ops.tree_infer_predict(jnp.asarray(x8), operands, scale, thr,
-                                  interpret=True)
+                                  vote_cap, interpret=True)
     for block_l in (128, 256):
         got = ops.tree_infer_predict(jnp.asarray(x8), operands, scale, thr,
-                                     block_l=block_l, interpret=True)
+                                     vote_cap, block_l=block_l,
+                                     interpret=True)
         np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
@@ -102,13 +110,13 @@ def test_forest_parity_padded_edge_cases():
         thresholds = jnp.concatenate(
             [jnp.asarray(p.threshold) for p in fr.ptrees])
         operands = ops.prepare_forest_operands(fr.ptrees, 5)
-        genes = jnp.asarray(
-            rng.uniform(0, 1, (5, fr.n_genes)).astype(np.float32))
-        scale, thr = ops.decode_population(thresholds, genes)
+        genes = _legacy_subspace(jnp.asarray(
+            rng.uniform(0, 1, (5, fr.n_genes)).astype(np.float32)))
+        scale, thr, vote_cap = ops.decode_population(thresholds, genes)
         preds = ops.tree_infer_predict(jnp.asarray(x8), operands, scale, thr,
-                                       interpret=True)
+                                       vote_cap, interpret=True)
         for i in range(genes.shape[0]):
-            bits, marg = quant.decode_genes(genes[i])
+            bits, marg, _, _ = quant.decode_tree_genes(genes[i])
             looped = forest_mod.forest_predict(fr, jnp.asarray(x8), bits, marg)
             descent = _descent_vote(fr, x8, np.asarray(bits), np.asarray(marg))
             np.testing.assert_array_equal(np.asarray(preds[i]),
@@ -121,11 +129,12 @@ def test_forest_reference_backend_matches_looped_fitness(forest_setup):
     ds, fr, x8 = forest_setup
     prob = search.build_forest_problem(fr, ds.x_test, ds.y_test)
     fit = search.make_fitness(prob, "reference")
-    genes = jax.random.uniform(jax.random.PRNGKey(5), (12, prob.n_genes))
+    genes = _legacy_subspace(
+        jax.random.uniform(jax.random.PRNGKey(5), (12, prob.n_genes)))
     got = np.asarray(fit(genes))
     y = np.asarray(ds.y_test)
     for i in range(genes.shape[0]):
-        bits, marg = quant.decode_genes(genes[i])
+        bits, marg, _, _ = quant.decode_tree_genes(genes[i])
         pred = np.asarray(
             forest_mod.forest_predict(fr, jnp.asarray(x8), bits, marg))
         acc = np.float32((pred == y).mean())
@@ -143,6 +152,41 @@ def test_forest_kernel_backend_bitexact_vs_reference(forest_setup):
                                   np.asarray(f_ker(pop)))
 
 
+def test_forest_parity_full_gene_space_vs_netlist(forest_setup):
+    """Fused kernel == reference predict == gate-level netlist sim over
+    random chromosomes spanning the FULL DESIGN.md §16 gene space (precision,
+    margin, LSB truncation, vote-adder toggle). The netlist lowers truncation
+    independently — by dropping low-bit comparator stages — so agreement here
+    is a genuine cross-layer check, not a shared-code tautology."""
+    from repro.core import netlist
+    ds, fr, x8 = forest_setup
+    prob = search.build_forest_problem(fr, ds.x_test, ds.y_test)
+    thresholds = jnp.concatenate([jnp.asarray(p.threshold) for p in fr.ptrees])
+    operands = ops.prepare_forest_operands(fr.ptrees, ds.n_features)
+    rng = np.random.default_rng(23)
+    genes = jnp.asarray(
+        rng.uniform(0, 1, (6, prob.n_genes)).astype(np.float32))
+    # force both vote-adder modes onto the sampled population
+    genes = genes.at[0, -1].set(0.0).at[1, -1].set(0.999)
+    scale, thr, vote_cap = ops.decode_population(thresholds, genes)
+    preds = ops.tree_infer_predict(jnp.asarray(x8), operands, scale, thr,
+                                   vote_cap, interpret=True)
+    for i in range(genes.shape[0]):
+        bits, marg, trunc, vote = quant.decode_tree_genes(genes[i])
+        t_sub = quant.substitute(
+            quant.threshold_to_int(thresholds, bits), marg, bits)
+        cap = jnp.where(vote > 0, jnp.float32(1.0), jnp.float32(jnp.inf))
+        ref = search.predict_votes(prob, bits - trunc,
+                                   jnp.right_shift(t_sub, trunc), cap)
+        circuit = netlist.build_circuit(
+            fr.ptrees, np.asarray(bits), np.asarray(t_sub), fr.n_classes,
+            trunc=np.asarray(trunc),
+            vote_adder="approx" if int(vote) else "exact")
+        sim = netlist.simulate(circuit, jnp.asarray(x8))
+        np.testing.assert_array_equal(np.asarray(preds[i]), np.asarray(ref))
+        np.testing.assert_array_equal(np.asarray(preds[i]), np.asarray(sim))
+
+
 # ---------------------------------------------------------------------------
 # single-tree engine parity with the historical pipeline
 # ---------------------------------------------------------------------------
@@ -157,12 +201,13 @@ def test_single_tree_objectives_match_independent_oracle(tree_setup):
     x8 = quantize_u8(ds.x_test).astype(np.int32)
     lut, offsets = area_mod.build_area_lut()
     rng = np.random.default_rng(11)
-    genes = jnp.asarray(rng.uniform(0, 1, (6, prob.n_genes)).astype(np.float32))
+    genes = _legacy_subspace(jnp.asarray(
+        rng.uniform(0, 1, (6, prob.n_genes)).astype(np.float32)))
     fit = search.make_fitness(prob, "reference")
     got = np.asarray(fit(genes))
     pj = ptree_to_jnp(pt)
     for i in range(genes.shape[0]):
-        bits, marg = quant.decode_genes(genes[i])
+        bits, marg, _, _ = quant.decode_tree_genes(genes[i])
         pred = predict_quantized(jnp.asarray(x8), pj, bits, marg)
         acc = np.float32((np.asarray(pred) == ds.y_test).mean())
         t_int = np.asarray(quant.substitute(
@@ -186,7 +231,7 @@ def test_run_search_reference_reproduces_legacy_pipeline(tree_setup):
     fit = approx.make_fitness_fn(prob)
     cfg = nsga2.NSGA2Config(pop_size=16, n_generations=5)
     state = nsga2.run(jax.random.PRNGKey(0), fit, prob.n_genes, cfg,
-                      seed_genes=quant.exact_genes(pt.n_comparators))
+                      seed_genes=quant.exact_tree_genes(pt.n_comparators))
     objs, genes = nsga2.pareto_front(state.objs, state.genes)
     np.testing.assert_array_equal(result.pareto_objs, np.asarray(objs))
     np.testing.assert_array_equal(result.pareto_genes, np.asarray(genes))

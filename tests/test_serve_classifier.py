@@ -80,9 +80,10 @@ def searched(tmp_path_factory):
 
 def _netlist_predict(artifact, point_idx: int, codes) -> np.ndarray:
     """The gate-level oracle, rebuilt from the artifact alone."""
-    bits, t_int = artifact.point_design(point_idx)
+    bits, t_int, trunc, vote_adder = artifact.point_design(point_idx)
     circuit = build_circuit(artifact.ptrees(), bits, t_int,
-                            artifact.n_classes)
+                            artifact.n_classes, trunc=trunc,
+                            vote_adder=vote_adder)
     return np.asarray(simulate(circuit, np.asarray(codes)))
 
 
@@ -95,9 +96,11 @@ def test_every_pareto_point_bit_exact(searched, case):
     x = np.asarray(ds.x_test)[:64]          # one 64-bucket per server
     assert len(artifact.points) >= 1
     for i in range(len(artifact.points)):
-        bits, t_int = artifact.point_design(i)
+        bits, t_int, trunc, vote_adder = artifact.point_design(i)
+        # tensor oracle evaluates the EFFECTIVE design (§16 folding)
+        cap = np.float32(1.0 if vote_adder == "approx" else np.inf)
         votes = np.asarray(search.predict_votes(
-            problem, bits, t_int))[: x.shape[0]]
+            problem, bits - trunc, t_int >> trunc, cap))[: x.shape[0]]
         gates = _netlist_predict(artifact, i, quantize_u8(x))
         for backend in BACKENDS:
             server = ClassifyServer.from_artifact(artifact, point=i,
@@ -277,6 +280,27 @@ def test_loader_rejects_missing_and_unknown_keys(searched):
     with pytest.raises(ValueError, match="bits"):
         from_payload(bad)
 
+    # §16 approximation config gets the same named-ValueError treatment
+    bad = copy.deepcopy(good)
+    del bad["pareto"][0]["vote_adder"]
+    with pytest.raises(ValueError, match=r"pareto\[0\].*missing keys"):
+        from_payload(bad)
+
+    bad = copy.deepcopy(good)
+    bad["pareto"][0]["trunc"] = bad["pareto"][0]["trunc"][:-1]
+    with pytest.raises(ValueError, match="trunc"):
+        from_payload(bad)
+
+    bad = copy.deepcopy(good)
+    bad["pareto"][0]["trunc"] = [9] * len(bad["pareto"][0]["trunc"])
+    with pytest.raises(ValueError, match="trunc"):
+        from_payload(bad)
+
+    bad = copy.deepcopy(good)
+    bad["pareto"][0]["vote_adder"] = "fuzzy"
+    with pytest.raises(ValueError, match="vote_adder"):
+        from_payload(bad)
+
     with pytest.raises(ValueError, match="JSON object"):
         from_payload([1, 2, 3])
 
@@ -289,7 +313,7 @@ def test_loader_rejects_missing_and_unknown_keys(searched):
 
 def test_server_constructor_validation(searched):
     _, artifact, _, _ = searched[("seeds", 1)]
-    bits, t_int = artifact.point_design(0)
+    bits, t_int, _, _ = artifact.point_design(0)
     with pytest.raises(ValueError, match="unknown serving backend"):
         ClassifyServer(artifact.ptrees(), bits, t_int, artifact.n_classes,
                        backend="verilog")

@@ -52,8 +52,11 @@ def test_pad_genes_are_inert_bitexact(campaign):
         g_real = rng.uniform(0, 1, problem.n_genes).astype(np.float32)
         a = rng.uniform(0, 1, pp.n_genes).astype(np.float32)
         b = rng.uniform(0, 1, pp.n_genes).astype(np.float32)
-        a[:problem.n_genes] = g_real
-        b[:problem.n_genes] = g_real
+        # §16 layout: comparator genes are a prefix, the design-level vote
+        # gene rides in the LAST padded column (TreeFamily.unpad_genes)
+        for g in (a, b):
+            g[:problem.n_genes - 1] = g_real[:-1]
+            g[-1] = g_real[-1]
         oa = np.asarray(sweep_mod.padded_objectives(pp, jnp.asarray(a)))
         ob = np.asarray(sweep_mod.padded_objectives(pp, jnp.asarray(b)))
         np.testing.assert_array_equal(oa, ob, err_msg=name)
@@ -75,12 +78,13 @@ def test_padded_matches_unpadded_semantics(campaign):
         for _ in range(4):
             g_real = rng.uniform(0, 1, problem.n_genes).astype(np.float32)
             g_pad = rng.uniform(0, 1, pp.n_genes).astype(np.float32)
-            g_pad[:problem.n_genes] = g_real
+            g_pad[:problem.n_genes - 1] = g_real[:-1]
+            g_pad[-1] = g_real[-1]
 
-            bits, t_sub = search.decode_chromosome(problem,
-                                                   jnp.asarray(g_real))
+            bits, t_sub, vote_cap = search.decode_chromosome(
+                problem, jnp.asarray(g_real))
             want_pred = np.asarray(
-                search.predict_votes(problem, bits, t_sub))
+                search.predict_votes(problem, bits, t_sub, vote_cap))
             got_pred = np.asarray(
                 sweep_mod.padded_predict(pp, jnp.asarray(g_pad)))[:b_real]
             np.testing.assert_array_equal(got_pred, want_pred, err_msg=name)

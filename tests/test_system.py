@@ -31,7 +31,8 @@ def searched():
 def test_exact_design_objectives(searched):
     _, _, pt, prob, _ = searched
     fit = approx.make_fitness_fn(prob)
-    o = np.asarray(fit(jnp.asarray(quant.exact_genes(pt.n_comparators))[None]))[0]
+    o = np.asarray(
+        fit(jnp.asarray(quant.exact_tree_genes(pt.n_comparators))[None]))[0]
     assert abs(o[0]) < 1e-6      # zero accuracy loss vs itself
     assert abs(o[1] - 1.0) < 1e-6  # unit normalized area
 
@@ -58,14 +59,19 @@ def test_power_tracks_area(searched):
     objs, _ = nsga2.pareto_front(state.objs, state.genes)
     a_mm2 = objs[:, 1] * prob.exact_area_mm2
     p_mw = np.array([area.power_mw(a) for a in a_mm2])
-    np.testing.assert_allclose(p_mw / a_mm2, area.POWER_PER_MM2_MW)
+    np.testing.assert_allclose(p_mw / a_mm2, area.POWER_PER_MM2_MW,
+                               rtol=1e-6)
 
 
 def test_rtl_emission(searched):
     _, _, pt, prob, state = searched
     objs, genes = nsga2.pareto_front(state.objs, state.genes)
-    bits, marg = quant.decode_genes(jnp.asarray(genes[0]))
-    t_int = quant.substitute(quant.threshold_to_int(jnp.asarray(pt.threshold), bits), marg, bits)
+    bits, marg, trunc, _ = quant.decode_tree_genes(jnp.asarray(genes[0]))
+    t_int = quant.substitute(
+        quant.threshold_to_int(jnp.asarray(pt.threshold), bits), marg, bits)
+    # emit the EFFECTIVE design: §16 truncation folds into width/threshold
+    bits = bits - trunc
+    t_int = jnp.right_shift(t_int, trunc)
     v = rtl.emit_verilog(pt, np.asarray(bits), np.asarray(t_int))
     assert v.count("wire d") == pt.n_comparators
     assert v.count("wire leaf") == pt.n_leaves

@@ -1,0 +1,154 @@
+"""Fault-campaign microbenchmark: vmapped stuck-at lanes vs the serial oracle.
+
+Measures `core.faults.FaultSimulator` (DESIGN.md §17) on exact tree and
+forest designs: the exhaustive single stuck-at campaign (every fault site x
+2 polarities x the full test split) through the chunked vmapped program,
+against `simulate_faulty_serial` — the per-gate Python oracle — on a fixed
+subset of the same lanes (the serial loop is deliberately naive; timing it
+on every lane would dominate the bench).
+
+Each `fault_campaign` row in BENCH_search.json records site throughput for
+both paths plus three deterministic invariants floor-checked by
+`tools/check_bench.py` (CI `--smoke` included):
+
+  - `zero_fault_mismatches == 0`: the empty-mask lane is bit-identical to
+    `core.netlist.simulate` over the full test split;
+  - `single_fault_oracle_mismatches == 0`: every sampled vmapped lane
+    matches the serial oracle array-for-array;
+  - `n_faults == 2 * n_sites`: stuck-at-0 AND stuck-at-1 of every site.
+
+The specs stay in the paper's printed-circuit regime (tens to ~a thousand
+gates, small tabular test splits) — that is where the vmapped-beats-serial
+floor holds and where every artifact's designs live. Far outside it
+(thousands of gates x thousands of vectors, e.g. an exact pendigits tree)
+the per-level value-table traffic of the levelized evaluator dominates and
+the naive per-gate numpy loop wins; the campaign layer still works there,
+it is just not what this bench floors.
+
+Run:  PYTHONPATH=src python -m benchmarks.fault_bench [--quick] [--out P]
+(with --out the artifact lands there instead of the committed
+BENCH_search.json; unmeasured sections carry over either way).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from benchmarks.ga_bench import write_artifact
+from repro import search
+from repro.core import faults, netlist
+from repro.core.forest import train_forest
+from repro.core.train import train_tree
+from repro.core.tree import to_parallel
+from repro.datasets import load_dataset, quantize_u8
+
+# (dataset, n_trees): exact designs, the largest circuits the artifact's
+# pareto points shrink from — single tree, wide forest, widest forest
+FAULT_SPECS = (("seeds", 1), ("vertebral", 3), ("seeds", 4))
+QUICK_SPECS = (("seeds", 1),)
+
+N_ORACLE_LANES = 8   # serial-oracle comparison subset (evenly spaced)
+
+
+def _build_circuit(dataset: str, n_trees: int):
+    import jax.numpy as jnp
+
+    ds = load_dataset(dataset)
+    if n_trees <= 1:
+        pt = to_parallel(train_tree(ds.x_train, ds.y_train, ds.n_classes))
+        problem = search.build_tree_problem(pt, ds.x_test, ds.y_test)
+    else:
+        forest = train_forest(ds.x_train, ds.y_train, ds.n_classes,
+                              n_trees=n_trees)
+        problem = search.build_forest_problem(forest, ds.x_test, ds.y_test)
+    bits, t_int, _ = search.decode_chromosome(
+        problem, jnp.asarray(problem.exact_genes()))
+    circuit = netlist.build_circuit(search.problem_ptrees(problem),
+                                    np.asarray(bits), np.asarray(t_int),
+                                    problem.n_classes)
+    x8 = quantize_u8(ds.x_test)
+    return circuit, x8
+
+
+def run_fault_campaign(specs=FAULT_SPECS) -> list[dict]:
+    rows = []
+    for dataset, n_trees in specs:
+        circuit, x8 = _build_circuit(dataset, n_trees)
+        sim = faults.FaultSimulator(circuit)
+        sites = faults.enumerate_fault_sites(circuit)
+        gates, values = faults.single_fault_lanes(circuit, sites)
+        n_faults = len(gates)
+
+        # deterministic invariant 1: the empty mask is the plain simulator
+        zero = sim.run_zero_fault(x8)
+        oracle = np.asarray(netlist.simulate(circuit, x8))
+        zero_mismatches = int((zero != oracle).sum())
+
+        # vmapped exhaustive campaign: one full warm pass compiles the
+        # chunk-shaped program, the second pass is the steady-state timing
+        sim.run_sites(x8, gates, values)
+        t0 = time.perf_counter()
+        preds = sim.run_sites(x8, gates, values)
+        wall_vmapped = time.perf_counter() - t0
+
+        # deterministic invariant 2: sampled lanes vs the serial oracle
+        lanes = np.linspace(0, n_faults - 1, min(N_ORACLE_LANES, n_faults),
+                            dtype=np.int64)
+        mismatches = 0
+        t0 = time.perf_counter()
+        for i in lanes:
+            serial = faults.simulate_faulty_serial(
+                circuit, x8, [(gates[i], values[i])])
+            mismatches += int(not np.array_equal(preds[i], serial))
+        wall_serial = time.perf_counter() - t0
+
+        faults_per_s = n_faults / max(wall_vmapped, 1e-9)
+        serial_per_s = len(lanes) / max(wall_serial, 1e-9)
+        rows.append({
+            "dataset": dataset,
+            "n_trees": n_trees,
+            "n_gates": int(circuit.n_gates),
+            "n_sites": len(sites),
+            "n_faults": int(n_faults),
+            "n_samples": int(x8.shape[0]),
+            "chunk": faults.auto_chunk(circuit, int(x8.shape[0])),
+            "faults_per_s_vmapped": round(faults_per_s, 1),
+            "faults_per_s_serial": round(serial_per_s, 1),
+            "vmapped_speedup_vs_serial":
+                round(faults_per_s / max(serial_per_s, 1e-9), 2),
+            "zero_fault_mismatches": zero_mismatches,
+            "single_fault_oracle_mismatches": mismatches,
+            "n_oracle_lanes": int(len(lanes)),
+        })
+    return rows
+
+
+def _print_rows(rows):
+    for r in rows:
+        print(f"faults.{r['dataset']}[{r['n_trees']}]: {r['n_gates']} gates, "
+              f"{r['n_sites']} sites x 2 = {r['n_faults']} faults over "
+              f"{r['n_samples']} vectors (chunk {r['chunk']}): "
+              f"vmapped {r['faults_per_s_vmapped']:,.0f} faults/s vs serial "
+              f"{r['faults_per_s_serial']:,.1f} "
+              f"({r['vmapped_speedup_vs_serial']}x; "
+              f"zero_fault_mismatches={r['zero_fault_mismatches']} "
+              f"oracle_mismatches={r['single_fault_oracle_mismatches']})")
+
+
+def main(quick=False, out=None):
+    rows = run_fault_campaign(QUICK_SPECS if quick else FAULT_SPECS)
+    path = write_artifact(fault_rows=rows, **({"path": out} if out else {}))
+    _print_rows(rows)
+    print(f"artifact: {path}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="one dataset (CI smoke)")
+    ap.add_argument("--out", default=None,
+                    help="artifact path (default: committed BENCH_search.json)")
+    args = ap.parse_args()
+    main(quick=args.quick, out=args.out)

@@ -559,7 +559,8 @@ def run_sharded(dataset="seeds", pop_per_shard=32, gens=8,
 
 def write_artifact(tree_rows=None, forest_rows=None, dispatch_rows=None,
                    fitness_rows=None, sharded_rows=None, serving_rows=None,
-                   mlp_fitness_rows=None, path=ARTIFACT) -> str:
+                   mlp_fitness_rows=None, fault_rows=None,
+                   path=ARTIFACT) -> str:
     """Emit BENCH_search.json: the search-engine throughput artifact.
 
     Sections passed as None are carried over from an existing artifact at
@@ -578,6 +579,7 @@ def write_artifact(tree_rows=None, forest_rows=None, dispatch_rows=None,
         "sharded_search": [],
         "serving": [],
         "mlp_fitness": [],
+        "fault_campaign": [],
     }
     try:
         with open(path) as f:
@@ -592,7 +594,8 @@ def write_artifact(tree_rows=None, forest_rows=None, dispatch_rows=None,
                     ("fitness_pipeline", fitness_rows),
                     ("sharded_search", sharded_rows),
                     ("serving", serving_rows),
-                    ("mlp_fitness", mlp_fitness_rows)):
+                    ("mlp_fitness", mlp_fitness_rows),
+                    ("fault_campaign", fault_rows)):
         if rows is not None:
             payload[k] = rows
     os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)

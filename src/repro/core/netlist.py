@@ -560,6 +560,23 @@ def build_mlp_circuit(w1, w2, shift: int, n_classes: int) -> Circuit:
 # batched simulation — the hardware oracle
 # ---------------------------------------------------------------------------
 
+def levelize(circuit: Circuit) -> np.ndarray:
+    """(G,) int32 logic level per gate (0 = inputs/constants).
+
+    Gate ids are topologically ordered by construction, so one linear pass
+    suffices. Shared by `simulate` and the fault-injection simulator
+    (`core.faults`, DESIGN.md §17), which applies stuck-at overrides as
+    per-level masks on the same schedule.
+    """
+    op, a, b = circuit.op, circuit.a, circuit.b
+    level = np.zeros(circuit.n_gates, np.int32)
+    for i in np.flatnonzero(op >= NOT):
+        la = level[a[i]]
+        lb = level[b[i]] if op[i] != NOT else 0
+        level[i] = max(la, lb) + 1
+    return level
+
+
 def simulate(circuit: Circuit, x8) -> jnp.ndarray:
     """(B,) predicted class over (B, F) int master codes.
 
@@ -571,12 +588,8 @@ def simulate(circuit: Circuit, x8) -> jnp.ndarray:
     """
     op, a, b = circuit.op, circuit.a, circuit.b
     g = circuit.n_gates
-    level = np.zeros(g, np.int32)
     logic = op >= NOT
-    for i in np.flatnonzero(logic):
-        la = level[a[i]]
-        lb = level[b[i]] if op[i] != NOT else 0
-        level[i] = max(la, lb) + 1
+    level = levelize(circuit)
 
     x8 = jnp.asarray(x8, jnp.int32)
     n_b = x8.shape[0]

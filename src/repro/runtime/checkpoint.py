@@ -77,12 +77,55 @@ def read_manifest(ckpt_dir: str, step: int) -> dict:
         return json.load(f)
 
 
+def checkpoint_error(ckpt_dir: str, step: int) -> str | None:
+    """Why `ckpt_<step>` cannot be restored, or None if it looks intact.
+
+    Probes everything `restore` depends on without touching devices: the
+    manifest must parse and carry its required fields, `arrays.npz` must
+    open AND fully decompress (a truncated write fails on read, not on
+    open), and every manifest key must be present in the archive.
+    """
+    path = os.path.join(ckpt_dir, f"ckpt_{step:08d}")
+    try:
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        missing = [k for k in ("step", "keys", "shapes", "dtypes")
+                   if k not in manifest]
+        if missing:
+            return f"manifest.json missing fields {missing}"
+        with np.load(os.path.join(path, "arrays.npz")) as data:
+            for key in manifest["keys"]:
+                arr = data[key]   # forces decompression of the member
+                if list(arr.shape) != list(manifest["shapes"][key]):
+                    return (f"arrays.npz[{key!r}] shape {list(arr.shape)} "
+                            f"!= manifest {manifest['shapes'][key]}")
+    except Exception as e:  # corrupt JSON, truncated zip, missing member...
+        return f"{type(e).__name__}: {e}"
+    return None
+
+
 def latest_step(ckpt_dir: str) -> int | None:
+    """Newest *intact* checkpoint step, or None.
+
+    A crash can leave a partially-written or corrupted `ckpt_<step>/`
+    (e.g. a torn filesystem under the atomic-rename contract, or manual
+    tampering); rather than letting the subsequent `restore` crash the
+    resume, each candidate is verified newest-first with
+    `checkpoint_error` and broken ones are skipped with a warning.
+    """
+    import warnings
+
     if not os.path.isdir(ckpt_dir):
         return None
-    steps = [int(m.group(1)) for d in os.listdir(ckpt_dir)
-             if (m := re.fullmatch(r"ckpt_(\d+)", d))]
-    return max(steps) if steps else None
+    steps = sorted((int(m.group(1)) for d in os.listdir(ckpt_dir)
+                    if (m := re.fullmatch(r"ckpt_(\d+)", d))), reverse=True)
+    for step in steps:
+        err = checkpoint_error(ckpt_dir, step)
+        if err is None:
+            return step
+        warnings.warn(f"skipping unreadable checkpoint "
+                      f"{ckpt_dir}/ckpt_{step:08d}: {err}")
+    return None
 
 
 def restore(ckpt_dir: str, step: int, like_tree, shardings=None):

@@ -345,11 +345,23 @@ class ClassifyServer:
         """Serve one request: (n, F) features -> (n,) predicted classes.
 
         Float inputs are featurized to the master grid; integer inputs are
-        taken as codes (masked to the circuit's 8 input bits).
+        taken as codes (masked to the circuit's 8 input bits). Non-finite
+        float features (NaN/±inf) are rejected with a `ValueError` before
+        the float->int quantization cast — `np.floor(nan).astype(int)` is
+        undefined behavior, and a printed sensor frontend feeding NaN is a
+        fault the caller must see, not a silently-served garbage class.
         """
         x = np.asarray(x)
-        codes = x if np.issubdtype(x.dtype, np.integer) else self.featurize(x)
-        return self.classify_codes(codes)
+        if np.issubdtype(x.dtype, np.integer):
+            return self.classify_codes(x)
+        bad = ~np.isfinite(x)
+        if bad.any():
+            rows = np.unique(np.nonzero(bad)[0])[:8]
+            raise ValueError(
+                f"classify: non-finite feature values (NaN/inf) in "
+                f"{int(bad.sum())} entries (rows {rows.tolist()}...); "
+                f"features must be finite floats in [0, 1]")
+        return self.classify_codes(self.featurize(x))
 
     # -- bucketed ping-pong step ------------------------------------------
 

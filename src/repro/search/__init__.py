@@ -57,6 +57,12 @@ from repro.search.artifact import (
     ParetoArtifact,
     load_pareto_artifact,
 )
+from repro.search.robustness import (
+    load_fault_report,
+    run_campaign,
+    validate_fault_report,
+    write_fault_report,
+)
 
 __all__ = [
     "SearchProblem",

@@ -5,6 +5,7 @@
         --backend kernel --pop 64 --gens 40 --out runs/seeds_forest
     PYTHONPATH=src python -m repro.search sweep --datasets all --report
     PYTHONPATH=src python -m repro.search serve --pareto OUT/pareto.json
+    PYTHONPATH=src python -m repro.search faults --pareto OUT/pareto.json
 
 The `serve` subcommand loads a searched design back out of `pareto.json`
 and serves feature-vector queries through `runtime.classify.ClassifyServer`
@@ -41,6 +42,24 @@ import numpy as np
 from repro.core import area
 from repro.datasets import DATASET_SPECS, load_dataset
 from repro import search
+
+
+def _load_artifact_or_exit(path: str):
+    """Load a pareto.json for a CLI, or exit(2) with a one-line error.
+
+    A missing, truncated, or schema-violating artifact is an operator
+    mistake, not a bug — so the CLIs report the named error on stderr and
+    exit non-zero instead of dumping a traceback.
+    """
+    import sys
+
+    try:
+        return search.load_pareto_artifact(path)
+    except (OSError, ValueError) as e:
+        msg = str(e).strip() or type(e).__name__
+        print(f"error: pareto artifact {path}: {type(e).__name__}: {msg}",
+              file=sys.stderr)
+        raise SystemExit(2)
 
 
 def sweep_main(argv=None) -> None:
@@ -90,6 +109,11 @@ def sweep_main(argv=None) -> None:
     ap.add_argument("--report", action="store_true",
                     help="score the campaign against paper Tables I/II "
                          "(OUT/sweep_report.json + OUT/REPORT.md)")
+    ap.add_argument("--fault-report", action="store_true",
+                    help="run the stuck-at robustness campaign on every "
+                         "dataset's best-under-loss point (DESIGN.md §17): "
+                         "OUT/<dataset>/fault_report.json + a robustness-"
+                         "vs-area section in REPORT.md")
     ap.add_argument("--max-loss", type=float, default=0.01)
     args = ap.parse_args(argv)
 
@@ -151,6 +175,39 @@ def sweep_main(argv=None) -> None:
         n_pts = sum(len(r.pareto_objs) for r in sweep.results.values())
         print(f"RTL verified: {n_pts} pareto points across {len(problems)} "
               f"problems (netlist sim == tensor predict == kernel route)")
+
+    if args.fault_report:
+        import os
+
+        from repro.search import robustness
+
+        print(f"== fault campaign: best point per dataset, defect_rate="
+              f"{robustness.DEFAULT_DEFECT_RATE:.0%}, "
+              f"{robustness.DEFAULT_TRIALS} MC trials ==")
+        for name in sorted(sweep.results):
+            pareto_path = os.path.join(args.out, name, "pareto.json")
+            if not os.path.exists(pareto_path):
+                continue
+            artifact = search.load_pareto_artifact(pareto_path)
+            problem = problems[name]
+            x8 = np.asarray(problem.x8)
+            y = np.asarray(problem.y)
+            try:
+                payload = robustness.run_campaign(
+                    artifact, x8, y, source=pareto_path,
+                    dataset=name, point="best", max_loss=args.max_loss)
+            except ValueError as e:   # e.g. no point within the budget
+                print(f"  {name}: skipped ({e})")
+                continue
+            out_path = robustness.write_fault_report(
+                payload, os.path.join(args.out, name, "fault_report.json"))
+            row = payload["points"][0]
+            print(f"  {name}: point {row['point']} "
+                  f"({row['n_sites']} sites) baseline "
+                  f"{row['baseline_accuracy']:.4f} -> 1-fault worst "
+                  f"{row['single_fault']['worst_accuracy']:.4f}, "
+                  f"MC {row['monte_carlo']['expected_accuracy']:.4f} "
+                  f"-> {out_path}")
 
     if args.report:
         meta = {"datasets": args.datasets, "trees": args.trees,
@@ -214,7 +271,7 @@ def serve_main(argv=None) -> None:
         from repro.runtime import compile_cache
         compile_cache.enable(args.compilation_cache)
 
-    artifact = search.load_pareto_artifact(args.pareto)
+    artifact = _load_artifact_or_exit(args.pareto)
     point = args.point if args.point == "best" else int(args.point)
     server = ClassifyServer.from_artifact(
         artifact, point=point, max_loss=args.max_loss,
@@ -286,6 +343,88 @@ def serve_main(argv=None) -> None:
               f"vs the gate-level simulation")
 
 
+def faults_main(argv=None) -> None:
+    """`python -m repro.search faults`: stuck-at robustness campaign.
+
+    Loads a `pareto.json`, rebuilds the selected point(s)' gate-level
+    circuits through the family registry, and runs the DESIGN.md §17
+    campaign — exhaustive single stuck-at over every fault site,
+    Monte-Carlo defect draws under fixed PRNG keys, and the critical-gate
+    ranking — writing a validated `fault_report.json` next to the artifact
+    (or to --out).
+    """
+    import os
+
+    from repro.datasets import quantize_u8
+    from repro.search import robustness
+
+    ap = argparse.ArgumentParser(prog="python -m repro.search faults")
+    ap.add_argument("--pareto", required=True,
+                    help="path to a pareto.json written by run_search/sweep")
+    ap.add_argument("--point", default="all",
+                    help="pareto point index, 'best' = smallest area within "
+                         "--max-loss, or 'all' (default)")
+    ap.add_argument("--max-loss", type=float, default=0.01)
+    ap.add_argument("--dataset", default=None,
+                    help="dataset whose test split drives the campaign "
+                         "(default: the artifact's recorded dataset)")
+    ap.add_argument("--defect-rate", type=float,
+                    default=robustness.DEFAULT_DEFECT_RATE,
+                    help="Monte-Carlo iid per-site defect probability")
+    ap.add_argument("--trials", type=int, default=robustness.DEFAULT_TRIALS,
+                    help="Monte-Carlo defect draws per point")
+    ap.add_argument("--mc-seed", type=int,
+                    default=robustness.DEFAULT_MC_SEED,
+                    help="PRNG seed for the Monte-Carlo masks (fixed seed "
+                         "-> bit-reproducible report)")
+    ap.add_argument("--top-k", type=int, default=robustness.DEFAULT_TOP_K,
+                    help="critical gates reported per point")
+    ap.add_argument("--chunk", type=int, default=None,
+                    help="fault lanes per vmapped dispatch (default: "
+                         "auto-sized to the memory budget)")
+    ap.add_argument("--out", default=None,
+                    help="fault_report.json path (default: next to --pareto)")
+    args = ap.parse_args(argv)
+
+    artifact = _load_artifact_or_exit(args.pareto)
+    dataset = args.dataset or artifact.dataset
+    if dataset is None:
+        ap.error("--dataset required: this artifact predates the recorded "
+                 "'dataset' label")
+    ds_name = dataset.removesuffix("_mlp")
+    if ds_name not in DATASET_SPECS:
+        ap.error(f"unknown dataset {ds_name!r}; options: "
+                 f"{sorted(DATASET_SPECS)}")
+    ds = load_dataset(ds_name)
+    x8 = quantize_u8(ds.x_test)
+    y = np.asarray(ds.y_test, np.int64)
+
+    family = getattr(artifact, "family", "tree")
+    print(f"== fault campaign: {args.pareto} [{family}] on {ds_name} "
+          f"({x8.shape[0]} test vectors), point={args.point}, "
+          f"defect_rate={args.defect_rate:.2%}, {args.trials} MC trials, "
+          f"seed={args.mc_seed} ==")
+    try:
+        payload = robustness.run_campaign(
+            artifact, x8, y, source=args.pareto, dataset=dataset,
+            point=args.point, max_loss=args.max_loss,
+            defect_rate=args.defect_rate, n_trials=args.trials,
+            seed=args.mc_seed, top_k=args.top_k, chunk=args.chunk,
+            verbose=True)
+    except ValueError as e:
+        import sys
+
+        print(f"error: fault campaign: {e}", file=sys.stderr)
+        raise SystemExit(2)
+    out = args.out or os.path.join(
+        os.path.dirname(args.pareto) or ".", "fault_report.json")
+    robustness.write_fault_report(payload, out)
+    worst = min(p["single_fault"]["worst_accuracy"]
+                for p in payload["points"])
+    print(f"campaign: {len(payload['points'])} point(s), worst single-fault "
+          f"accuracy {worst:.4f}; report: {out}")
+
+
 def main(argv=None) -> None:
     import sys
 
@@ -294,6 +433,8 @@ def main(argv=None) -> None:
         return sweep_main(argv[1:])
     if argv and argv[0] == "serve":
         return serve_main(argv[1:])
+    if argv and argv[0] == "faults":
+        return faults_main(argv[1:])
     ap = argparse.ArgumentParser(prog="python -m repro.search")
     ap.add_argument("--dataset", default="seeds",
                     choices=sorted(DATASET_SPECS))

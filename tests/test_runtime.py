@@ -45,6 +45,45 @@ def test_checkpoint_crash_safety(tmp_path):
                                   np.asarray(tree["x"]))
 
 
+def test_checkpoint_resume_skips_truncated_npz(tmp_path):
+    """Regression (DESIGN.md §17 satellite): a partially-written
+    `arrays.npz` in the newest checkpoint must not kill the resume —
+    `latest_step` warns, skips it, and falls back to the newest intact
+    step, and `restore` of that step round-trips."""
+    tree = {"x": jnp.arange(4.0), "n": {"y": jnp.ones((3,), jnp.int32)}}
+    checkpoint.save(str(tmp_path), 1, tree)
+    checkpoint.save(str(tmp_path), 2, tree)
+    npz = os.path.join(tmp_path, "ckpt_00000002", "arrays.npz")
+    with open(npz, "rb") as f:
+        blob = f.read()
+    with open(npz, "wb") as f:
+        f.write(blob[: len(blob) // 2])   # torn write
+    with pytest.warns(UserWarning, match="skipping unreadable checkpoint"):
+        step = checkpoint.latest_step(str(tmp_path))
+    assert step == 1
+    restored, got = checkpoint.restore(str(tmp_path), step, tree)
+    assert got == 1
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), tree, restored)
+
+
+def test_checkpoint_resume_skips_corrupt_manifest(tmp_path):
+    """Same fallback for a corrupt/incomplete manifest.json; with NO intact
+    checkpoint left, latest_step reports None (fresh start) instead of
+    crashing."""
+    tree = {"x": jnp.arange(4.0)}
+    checkpoint.save(str(tmp_path), 1, tree)
+    checkpoint.save(str(tmp_path), 2, tree)
+    with open(os.path.join(tmp_path, "ckpt_00000002",
+                           "manifest.json"), "w") as f:
+        f.write('{"step": 2, "keys"')   # truncated JSON
+    with pytest.warns(UserWarning, match="ckpt_00000002"):
+        assert checkpoint.latest_step(str(tmp_path)) == 1
+    os.remove(os.path.join(tmp_path, "ckpt_00000001", "manifest.json"))
+    with pytest.warns(UserWarning):
+        assert checkpoint.latest_step(str(tmp_path)) is None
+
+
 def test_data_pipeline_determinism_and_sharding():
     data = SyntheticLMData(vocab_size=1000, seq_len=64, global_batch=8, seed=3)
     b1 = data.batch(5)

@@ -175,6 +175,32 @@ def test_float_and_code_paths_agree(searched):
         server.classify_codes(server.featurize(x)))
 
 
+@settings(max_examples=16, deadline=None)
+@given(n=st.integers(min_value=1, max_value=12),
+       row=st.integers(min_value=0, max_value=2**31),
+       col=st.integers(min_value=0, max_value=2**31),
+       bad=st.sampled_from(("nan", "+inf", "-inf")),
+       everywhere=st.booleans())
+def test_classify_rejects_non_finite_features(searched, n, row, col, bad,
+                                              everywhere):
+    """Satellite contract: NaN/±inf feature vectors raise a named
+    ValueError BEFORE the float->int quantization cast (whose behavior on
+    non-finite values is undefined) — one poisoned entry or a whole batch
+    alike, while the same batch without the poison still serves."""
+    _, artifact, _, ds = searched[("seeds", 1)]
+    server = ClassifyServer.from_artifact(artifact, point=0)
+    x = np.asarray(ds.x_test[:n], np.float64).copy()
+    poison = {"nan": np.nan, "+inf": np.inf, "-inf": -np.inf}[bad]
+    if everywhere:
+        x[:] = poison
+    else:
+        x[row % x.shape[0], col % x.shape[1]] = poison
+    with pytest.raises(ValueError, match="non-finite"):
+        server.classify(x)
+    clean = np.asarray(ds.x_test[:n], np.float64)
+    assert server.classify(clean).shape == (n,)
+
+
 # --- bucket invariance + ping-pong steadiness ------------------------------
 
 @pytest.mark.parametrize("backend", BACKENDS)

@@ -41,6 +41,13 @@ or hand-mangled artifact fails loudly:
      covering the batch (all deterministic — checked even in --smoke), and
      at-scale rows (batch >= SERVING_FLOOR_MIN_BATCH) keeping batched
      serving at least at per-sample parity with batch=1 dispatches.
+  8. invariant: `fault_campaign` rows (DESIGN.md §17) must show the vmapped
+     stuck-at simulator bit-exact against its two oracles — zero mismatches
+     vs plain `simulate` on the empty-mask lane and vs the serial per-gate
+     oracle on the sampled single-fault lanes — with every site covered by
+     exactly two lanes (deterministic — checked even in --smoke); full runs
+     additionally floor the vmapped-vs-serial fault throughput at
+     FAULT_MIN_VMAPPED_SPEEDUP.
 
 `--smoke` validates a freshly-measured artifact in CI: schema + the
 deterministic invariants only (timing floors are meaningless on a shared
@@ -154,6 +161,21 @@ SCHEMA = {
         "w1_stream_bytes_per_eval_kernel": int,
         "w1_stream_reduction": float,
     },
+    "fault_campaign": {
+        "dataset": str,
+        "n_trees": int,
+        "n_gates": int,
+        "n_sites": int,
+        "n_faults": int,
+        "n_samples": int,
+        "chunk": int,
+        "faults_per_s_vmapped": float,
+        "faults_per_s_serial": float,
+        "vmapped_speedup_vs_serial": float,
+        "zero_fault_mismatches": int,
+        "single_fault_oracle_mismatches": int,
+        "n_oracle_lanes": int,
+    },
     "serving": {
         "dataset": str,
         "n_trees": int,
@@ -181,6 +203,14 @@ SCHEMA = {
 # enforced in --smoke too.
 SERVING_FLOOR_MIN_BATCH = 32
 SERVING_MIN_BATCHED_SPEEDUP = 1.0
+
+# DESIGN.md §17: the fault campaign's bit-exactness floors are analytic —
+# the empty-mask lane must equal plain `simulate` on every test vector, the
+# sampled vmapped lanes must equal the serial per-gate oracle, and each site
+# contributes exactly a stuck-at-0 and a stuck-at-1 lane. The vmapped
+# program batches fault lanes the serial loop walks one gate at a time, so
+# even CPU smoke runs must keep it at least at parity.
+FAULT_MIN_VMAPPED_SPEEDUP = 1.0
 
 # DESIGN.md §15: the printed-MLP fused route streams the gathered layer-1
 # weight stack to qmatmul as int8 (1 byte/weight, dequantized on-chip per
@@ -293,6 +323,18 @@ def check_speedups(bench: dict, min_speedup: float, errors: list[str]) -> None:
         errors.append(
             f"serving: no row reaches batch >= {SERVING_FLOOR_MIN_BATCH} — "
             f"the section must include an at-scale batched row")
+    for i, row in enumerate(bench.get("fault_campaign", [])):
+        if not isinstance(row, dict):
+            continue
+        speedup = row.get("vmapped_speedup_vs_serial")
+        if (isinstance(speedup, (int, float))
+                and speedup < FAULT_MIN_VMAPPED_SPEEDUP):
+            errors.append(
+                f"fault_campaign[{i}] ({row.get('dataset')}"
+                f"[{row.get('n_trees')}]): vmapped_speedup_vs_serial="
+                f"{speedup:.3f} < {FAULT_MIN_VMAPPED_SPEEDUP} — the batched "
+                f"fault simulator no longer beats the serial per-gate "
+                f"oracle (DESIGN.md §17)")
 
 
 def check_deterministic(bench: dict, errors: list[str]) -> None:
@@ -381,6 +423,30 @@ def check_deterministic(bench: dict, errors: list[str]) -> None:
             f"{SHARDED_MIN_SHARDS} — the weak-scaling ladder must include a "
             f">= {SHARDED_MIN_SHARDS}-way mesh row (simulate devices with "
             f"XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+    for i, row in enumerate(bench.get("fault_campaign", [])):
+        if not isinstance(row, dict):
+            continue
+        who = (f"fault_campaign[{i}] "
+               f"({row.get('dataset')}[{row.get('n_trees')}])")
+        zero = row.get("zero_fault_mismatches")
+        if isinstance(zero, int) and zero != 0:
+            errors.append(
+                f"{who}: zero_fault_mismatches={zero} != 0 — the empty-mask "
+                f"fault lane diverged from core.netlist.simulate "
+                f"(DESIGN.md §17)")
+        mism = row.get("single_fault_oracle_mismatches")
+        if isinstance(mism, int) and mism != 0:
+            errors.append(
+                f"{who}: single_fault_oracle_mismatches={mism} != 0 — "
+                f"vmapped stuck-at lanes diverged from the serial per-gate "
+                f"oracle (DESIGN.md §17)")
+        sites, n_faults = row.get("n_sites"), row.get("n_faults")
+        if (isinstance(sites, int) and isinstance(n_faults, int)
+                and n_faults != 2 * sites):
+            errors.append(
+                f"{who}: n_faults={n_faults} != 2 * n_sites={sites} — the "
+                f"exhaustive campaign must cover stuck-at-0 AND stuck-at-1 "
+                f"of every site (DESIGN.md §17)")
     for i, row in enumerate(bench.get("serving", [])):
         if not isinstance(row, dict):
             continue
